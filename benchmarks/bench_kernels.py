@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks: flash attention XLA path + merge throughput.
+
+(The Pallas path is validated in interpret mode by tests; wall-clock kernel
+numbers on CPU are schedule checks, not TPU performance.)
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.merge import merge_partials
+from repro.kernels.ops import flash_attention
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile+warm
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for (B, S, H, D), causal in [((1, 2048, 8, 64), True), ((1, 4096, 8, 64), True)]:
+        q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.bfloat16)
+        fn = jax.jit(
+            lambda q: flash_attention(q, q, q, causal=causal, impl="xla")[0]
+        )
+        dt = _time(fn, q)
+        flops = 4 * B * H * S * S * D * (0.5 if causal else 1.0)
+        print(f"| flash_xla B{B} S{S} H{H} D{D} causal={causal} | "
+              f"{dt*1e3:.1f} ms | {flops/dt/1e9:.1f} GFLOP/s |")
+        rows.append((f"flash_xla/S{S}", dt * 1e6, f"{flops/dt/1e9:.0f}GFLOPs"))
+
+    # merge throughput (the Update() of the paper)
+    shape = (4, 2048, 8, 64)
+    o1 = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    l1 = jnp.asarray(rng.standard_normal(shape[:-1]), jnp.float32)
+    fn = jax.jit(lambda a, b, c, d: merge_partials(a, b, c, d)[0])
+    dt = _time(fn, o1, l1, o1, l1)
+    rows.append(("merge_partials/4x2048x8x64", dt * 1e6, ""))
+    print(f"| merge_partials {shape} | {dt*1e3:.2f} ms |")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

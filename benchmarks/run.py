@@ -1,0 +1,68 @@
+"""Benchmark harness: one section per paper table/figure + roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV at the end (harness convention).
+
+  * Table 1 analog  — per-scheme communication volumes (bench_comm_volume)
+  * Figure 6 analog — per-step times, ring vs tokenring (bench_attention_steps;
+    modeled on v5e constants + measured on 4 simulated devices in a
+    subprocess so this process keeps a single CPU device)
+  * kernel micro-benchmarks (bench_kernels)
+  * roofline summary — from the dry-run artifacts (roofline_report)
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+
+def main() -> None:
+    rows = []
+
+    from benchmarks import bench_comm_volume, bench_kernels
+
+    print("=" * 72)
+    print("Table 1 analog: communication volumes")
+    rows += bench_comm_volume.run()
+
+    print("=" * 72)
+    print("Figure 6 analog: per-step attention times (modeled)")
+    from benchmarks import bench_attention_steps
+
+    rows += bench_attention_steps.run()
+
+    # measured wall-clock needs 4 devices -> subprocess
+    print("=" * 72)
+    print("Figure 6 analog: measured wall-clock (4 simulated devices)")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_attention_steps"],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    print(proc.stdout[-2000:])
+    if proc.returncode != 0:
+        print("measured-bench subprocess failed:", proc.stderr[-1000:])
+
+    print("=" * 72)
+    print("Kernel micro-benchmarks")
+    rows += bench_kernels.run()
+
+    print("=" * 72)
+    print("Roofline summary (from dry-run artifacts)")
+    try:
+        from benchmarks import roofline_report
+
+        roofline_report.main()
+    except Exception as e:  # artifacts may not exist yet
+        print("roofline report unavailable:", e)
+
+    print("=" * 72)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""End-to-end serving driver: batched requests + long-context decode demo.
+
+TokenRing's serving premise: the KV cache never moves.  This example serves a
+small model with batched requests through the continuous-batching engine,
+then demonstrates the sequence-parallel decode path (sharded cache + 1-token
+Q + lse-merge) directly on a long cache.
+
+    PYTHONPATH=src python examples/serve_longcontext.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core.api import ParallelContext
+from repro.models import build_model
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    cfg = ARCHS["granite-3-8b"].reduced()
+    pctx = ParallelContext(mesh=None)
+    bundle = build_model(cfg, pctx)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    # --- batched serving -------------------------------------------------
+    eng = ServingEngine(bundle, params, max_batch=4, max_len=256)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for _ in range(12):
+        plen = int(rng.integers(4, 12))
+        eng.submit(rng.integers(0, cfg.vocab_size, plen), max_new_tokens=16)
+    eng.run()
+    s = eng.stats()
+    dt = time.perf_counter() - t0
+    print(
+        f"batched serving: {s['requests']} requests, {s['tokens']} tokens, "
+        f"{s['tokens']/dt:.1f} tok/s, ttft {s['mean_ttft_s']*1e3:.0f} ms"
+    )
+
+    # --- long-context decode: cache grows, per-token cost stays flat ------
+    state = bundle.init_serve_state(2, 1024)
+    step = jax.jit(bundle.decode_step)
+    toks = np.zeros((2,), np.int32)
+    times = []
+    for t in range(192):
+        logits, state = step(params, jax.numpy.asarray(toks), state)
+        logits.block_until_ready()
+        if t in (32, 96, 191):
+            t0 = time.perf_counter()
+            for _ in range(8):
+                logits, state = step(params, jax.numpy.asarray(toks), state)
+            logits.block_until_ready()
+            times.append((t, (time.perf_counter() - t0) / 8))
+        toks = np.asarray(jax.numpy.argmax(logits, -1), np.int32)
+    for ctx, dt in times:
+        print(f"decode @ context {ctx:4d}: {dt*1e3:.2f} ms/token")
+    print("(flat per-token cost: position-masked static cache, no re-layout)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Compare SP attention strategies: correctness + comm accounting.
+
+Runs every strategy on 8 simulated devices against the same inputs, checks
+they agree, and prints the analytic per-direction communication table that
+drives the auto-chooser (the beyond-paper GQA decision).
+
+    PYTHONPATH=src python examples/strategy_compare.py
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import ParallelContext, choose_strategy, sp_attention  # noqa: E402
+from repro.core.zigzag import to_zigzag  # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    B, S, Hq, Hkv, D = 2, 512, 8, 2, 64  # GQA 4:1
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    pos = to_zigzag(jnp.arange(S, dtype=jnp.int32)[None, :, None], 4, axis=1)[0, :, 0]
+    qz, kz, vz = (to_zigzag(x, 4, axis=1) for x in (q, k, v))
+
+    outs = {}
+    for strategy in ["ring", "ring_bidir", "tokenring", "tokenring_faithful",
+                     "ulysses", "auto"]:
+        if strategy == "ulysses" and Hkv % 4:
+            continue  # the paper's Table-1 head-count limitation, live
+        pctx = ParallelContext(
+            mesh=mesh, sp_axes=("model",), strategy=strategy, impl="xla",
+            block_q=64, block_k=64,
+        )
+        out = jax.jit(
+            lambda q, k, v, p: sp_attention(q, k, v, p, p, pctx=pctx, causal=True)
+        )(qz, kz, vz, pos)
+        outs[strategy] = np.asarray(out)
+        resolved = choose_strategy(strategy, Hq, Hkv, 4)
+        print(f"{strategy:22s} -> {resolved:12s} out[0,0,0,:3] = "
+              f"{np.asarray(out)[0, 0, 0, :3]}")
+
+    ref = outs["ring"]
+    for name, o in outs.items():
+        np.testing.assert_allclose(o, ref, atol=2e-4, rtol=2e-4, err_msg=name)
+    print("\nall strategies agree; auto-chooser picked "
+          f"'{choose_strategy('auto', Hq, Hkv, 4)}' for GQA {Hq}:{Hkv} "
+          "(KV bytes < Q+out bytes)")
+
+    P = 4
+    S_loc = S // P
+    b = 4
+    print("\nper-direction bytes/step (this config):")
+    print(f"  ring (uni)   : {2*S_loc*Hkv*D*b:>8d} fwd, {0:>8d} bwd")
+    print(f"  ring_bidir   : {S_loc*Hkv*D*b:>8d} fwd, {S_loc*Hkv*D*b:>8d} bwd")
+    print(f"  tokenring    : {S_loc*Hq*D*b:>8d} fwd, {S_loc*Hq*D*b:>8d} bwd")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: TokenRing sequence parallelism framework (JAX + Pallas)."""
+
+__version__ = "1.0.0"

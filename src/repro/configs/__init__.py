@@ -1,0 +1,37 @@
+"""Architecture registry: the 10 assigned configs + the paper's own model."""
+
+from repro.configs.falcon_mamba_7b import CONFIG as falcon_mamba_7b
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as qwen3_moe_30b_a3b
+from repro.configs.llama4_scout_17b_a16e import CONFIG as llama4_scout_17b_a16e
+from repro.configs.whisper_base import CONFIG as whisper_base
+from repro.configs.recurrentgemma_2b import CONFIG as recurrentgemma_2b
+from repro.configs.granite_3_8b import CONFIG as granite_3_8b
+from repro.configs.qwen3_1_7b import CONFIG as qwen3_1_7b
+from repro.configs.olmo_1b import CONFIG as olmo_1b
+from repro.configs.qwen2_72b import CONFIG as qwen2_72b
+from repro.configs.pixtral_12b import CONFIG as pixtral_12b
+from repro.configs.llama2_7b import CONFIG as llama2_7b
+
+ARCHS = {
+    c.name: c
+    for c in [
+        falcon_mamba_7b,
+        qwen3_moe_30b_a3b,
+        llama4_scout_17b_a16e,
+        whisper_base,
+        recurrentgemma_2b,
+        granite_3_8b,
+        qwen3_1_7b,
+        olmo_1b,
+        qwen2_72b,
+        pixtral_12b,
+        llama2_7b,
+    ]
+}
+
+# The 10 assignment architectures (llama2-7b is the paper's own benchmark model).
+ASSIGNED = [k for k in ARCHS if k != "llama2-7b"]
+
+
+def get_config(name: str):
+    return ARCHS[name]

@@ -1,0 +1,29 @@
+"""The paper's contribution: TokenRing sequence-parallel attention.
+
+Public surface:
+  * sp_attention  — SP attention on global arrays (ring/tokenring/ulysses/hybrid)
+  * sp_decode     — SP decode against a sequence-sharded KV cache
+  * sp_scan       — SP diagonal linear recurrence (SSM / RG-LRU substrate)
+  * ParallelContext — static distribution descriptor threaded through models
+"""
+
+from repro.core.api import (
+    ParallelContext,
+    choose_strategy,
+    sp_attention,
+    sp_decode,
+    sp_scan,
+)
+from repro.core.merge import empty_partial, finalize, merge_many, merge_partials
+
+__all__ = [
+    "ParallelContext",
+    "choose_strategy",
+    "sp_attention",
+    "sp_decode",
+    "sp_scan",
+    "merge_partials",
+    "merge_many",
+    "finalize",
+    "empty_partial",
+]

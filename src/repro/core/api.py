@@ -1,0 +1,288 @@
+"""Public sequence-parallel attention API.
+
+Models never call the strategy functions directly: they call
+:func:`sp_attention` / :func:`sp_decode` with *global* (logically unsharded)
+arrays and a :class:`ParallelContext`.  The API owns the ``shard_map`` region:
+activations enter sharded ``P(data, (pod, model), None, None)``, the chosen
+strategy runs its explicit ppermute schedule inside, and the result leaves
+with the same sharding — the surrounding ``jit`` (projections, FFN, loss)
+stays in ordinary XLA-SPMD land.
+
+Strategy selection:
+  * ``"tokenring"``           — paper's method, TPU-adapted (default)
+  * ``"tokenring_faithful"``  — paper's Algorithm 1 literal schedule
+  * ``"ring"`` / ``"ring_bidir"`` — baselines
+  * ``"ulysses"``             — all-to-all head parallelism (head-count bound)
+  * ``"auto"``                — beyond-paper byte-count chooser: TokenRing
+    moves O(Hq·D) per direction per step while bidirectional-KV ring moves
+    O(Hkv·D); under GQA (Hkv << Hq) the KV ring wins, under MHA TokenRing
+    (resident KV, better decode reuse) wins.  The decision is static — it
+    depends only on shapes.
+
+With two SP axes (multi-pod) every strategy is automatically wrapped in the
+paper's Case-Study-III hybrid: inter-pod KV ring outside, the chosen intra-pod
+strategy inside.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.hybrid import hybrid_sp
+from repro.core.recurrence import chunked_linear_recurrence
+from repro.core.ring_attention import ring_attention_bidir_sp, ring_attention_sp
+from repro.core.token_ring import token_ring_sp
+from repro.core.ulysses import ulysses_sp
+from repro.core.decode import sp_decode_attention
+from repro.kernels.ops import flash_attention
+
+__all__ = ["ParallelContext", "sp_attention", "sp_decode", "sp_scan", "choose_strategy"]
+
+
+@dataclass(frozen=True)
+class ParallelContext:
+    """Static description of how a model instance is distributed."""
+
+    mesh: Mesh | None = None
+    data_axis: str | None = "data"
+    sp_axes: tuple[str, ...] = ()  # ("model",) or ("pod", "model")
+    strategy: str = "tokenring"
+    layout: str = "zigzag"  # zigzag | contig (layout of the seq dim in data)
+    impl: str = "auto"  # kernel impl: auto | pallas | pallas_interpret | xla
+    block_q: int = 512
+    block_k: int = 512
+    inner_strategy: str | None = None  # hybrid inner; defaults to `strategy`
+    # Wire format of the traveling (out, lse) accumulator in TokenRing:
+    # "bfloat16" halves the per-direction link bytes at ~1e-3 merge rounding
+    # (lse always stays fp32).  See benchmarks/bench_comm_volume.py.
+    travel_dtype: str = "float32"
+
+    @property
+    def sp_degree(self) -> int:
+        if self.mesh is None:
+            return 1
+        d = 1
+        for ax in self.sp_axes:
+            d *= self.mesh.shape[ax]
+        return d
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None and self.sp_degree > 1
+
+    def seq_spec(self):
+        """PartitionSpec entry for the sequence dimension."""
+        if not self.sp_axes:
+            return None
+        return self.sp_axes if len(self.sp_axes) > 1 else self.sp_axes[0]
+
+
+def choose_strategy(strategy: str, Hq: int, Hkv: int, P_sp: int) -> str:
+    """Resolve 'auto' to a concrete strategy from static shape arithmetic."""
+    if strategy != "auto":
+        return strategy
+    if Hkv < Hq:
+        # GQA/MQA: KV bytes per step (ring_bidir, ∝Hkv) < Q+out (∝Hq).
+        return "ring_bidir"
+    return "tokenring"
+
+
+def _strategy_fn(name: str):
+    if name == "tokenring":
+        return partial(token_ring_sp, variant="bidir")
+    if name == "tokenring_faithful":
+        return partial(token_ring_sp, variant="faithful")
+    if name == "ring":
+        return ring_attention_sp
+    if name == "ring_bidir":
+        return ring_attention_bidir_sp
+    if name == "ulysses":
+        return ulysses_sp
+    raise ValueError(f"unknown SP strategy {name!r}")
+
+
+def sp_attention(
+    q,
+    k,
+    v,
+    q_pos,
+    k_pos,
+    *,
+    pctx: ParallelContext,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+):
+    """Sequence-parallel attention on global arrays.
+
+    ``q (B,Sq,Hq,D)``, ``k/v (B,Sk,Hkv,D)``, ``q_pos (B,Sq)``/``(Sq,)``,
+    ``k_pos (B,Sk)``/``(Sk,)`` global token positions (already
+    layout-permuted, e.g. zigzag; per-batch rows support continuous batching).
+    """
+    from repro.kernels.ref import normalize_positions
+
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    q_pos = normalize_positions(q_pos, B, Sq)
+    k_pos = normalize_positions(k_pos, B, Sk)
+
+    if not pctx.active:
+        out, _ = flash_attention(
+            q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal, window=window,
+            scale=scale, impl=pctx.impl, block_q=pctx.block_q,
+            block_k=pctx.block_k,
+        )
+        return out
+
+    strategy = choose_strategy(pctx.strategy, Hq, Hkv, pctx.sp_degree)
+    dp = pctx.data_axis
+    seq = pctx.seq_spec()
+    qspec = P(dp, seq, None, None)
+    pspec = P(dp, seq)
+
+    kw = dict(
+        causal=causal, window=window, scale=scale, impl=pctx.impl,
+        block_q=pctx.block_q, block_k=pctx.block_k,
+    )
+    tr_kw = dict(kw, travel_dtype=pctx.travel_dtype)
+
+    if window is not None:
+        # Sliding-window layers: halo exchange fetches exactly the needed
+        # neighbor shards instead of circulating the whole sequence
+        # (requires contiguous layout; see core/window.py).
+        from repro.core.window import window_attention_sp
+
+        axis = pctx.sp_axes if len(pctx.sp_axes) > 1 else pctx.sp_axes[0]
+
+        def local_window(q, k, v, qp, kp):
+            kw2 = dict(kw)
+            kw2.pop("window")
+            return window_attention_sp(q, k, v, qp, kp, axis_name=axis, window=window, **kw2)
+
+        shard = jax.shard_map(
+            local_window,
+            mesh=pctx.mesh,
+            in_specs=(qspec, qspec, qspec, pspec, pspec),
+            out_specs=qspec,
+            check_vma=False,
+        )
+        return shard(q, k, v, q_pos, k_pos)
+
+    if len(pctx.sp_axes) >= 2:
+        pod_axis, axis_name = pctx.sp_axes[0], pctx.sp_axes[1]
+        inner = pctx.inner_strategy or strategy
+        if inner.startswith("tokenring_faithful"):
+            inner = "tokenring_faithful"
+        elif inner.startswith("tokenring"):
+            inner = "tokenring"
+
+        def local(q, k, v, qp, kp):
+            return hybrid_sp(
+                q, k, v, qp, kp, pod_axis=pod_axis, axis_name=axis_name,
+                inner=inner if inner in ("tokenring", "tokenring_faithful", "ring", "ulysses") else "tokenring",
+                **kw,
+            )
+
+    else:
+        axis_name = pctx.sp_axes[0]
+        fn = _strategy_fn(strategy)
+        use_kw = tr_kw if strategy.startswith("tokenring") else kw
+
+        def local(q, k, v, qp, kp):
+            return fn(q, k, v, qp, kp, axis_name=axis_name, **use_kw)
+
+    shard = jax.shard_map(
+        local,
+        mesh=pctx.mesh,
+        in_specs=(qspec, qspec, qspec, pspec, pspec),
+        out_specs=qspec,
+        check_vma=False,
+    )
+    return shard(q, k, v, q_pos, k_pos)
+
+
+def sp_decode(
+    q,
+    k_cache,
+    v_cache,
+    k_pos,
+    q_pos,
+    *,
+    pctx: ParallelContext,
+    window: int | None = None,
+    scale: float | None = None,
+):
+    """Sequence-parallel decode: tiny Q replicated, cache stays sharded.
+
+    ``q (B,Sq,Hq,D)`` (Sq small), caches ``(B,Skv,Hkv,D)`` sharded over the SP
+    axes on dim 1, ``k_pos (B,Skv)`` (PAD_POS sentinel for unwritten slots),
+    ``q_pos (B,Sq)`` — per-request rows support continuous batching.
+    """
+    from repro.kernels.ref import normalize_positions
+
+    B = q.shape[0]
+    q_pos = normalize_positions(q_pos, B, q.shape[1])
+    k_pos = normalize_positions(k_pos, B, k_cache.shape[1])
+
+    if not pctx.active:
+        out, _ = flash_attention(
+            q, k_cache, v_cache, q_pos=q_pos, k_pos=k_pos, causal=True,
+            window=window, scale=scale, impl=pctx.impl, block_k=pctx.block_k,
+        )
+        return out
+
+    dp = pctx.data_axis
+    seq = pctx.seq_spec()
+    qspec = P(dp, None, None, None)
+    cspec = P(dp, seq, None, None)
+
+    def local(q, kc, vc, kp, qp):
+        return sp_decode_attention(
+            q, kc, vc, kp, q_pos=qp, axis_names=pctx.sp_axes, causal=True,
+            window=window, scale=scale, impl=pctx.impl, block_k=pctx.block_k,
+        )
+
+    shard = jax.shard_map(
+        local,
+        mesh=pctx.mesh,
+        in_specs=(qspec, cspec, cspec, P(dp, seq), P(dp, None)),
+        out_specs=qspec,
+        check_vma=False,
+    )
+    return shard(q, k_cache, v_cache, k_pos, q_pos)
+
+
+def sp_scan(a, b, *, pctx: ParallelContext, axis: int = 1):
+    """Sequence-parallel diagonal linear recurrence on global arrays.
+
+    Requires ``layout="contig"`` semantics on the sequence dim (recurrences
+    are order-sensitive; zigzag does not apply — see DESIGN.md).
+    """
+    if not pctx.active:
+        from repro.core.recurrence import local_linear_recurrence
+
+        h, _ = local_linear_recurrence(a, b, axis=axis)
+        return h
+
+    dp = pctx.data_axis
+    seq = pctx.seq_spec()
+    spec_entries = [dp] + [None] * (a.ndim - 1)
+    spec_entries[axis] = seq
+    spec = P(*spec_entries)
+    axis_name = pctx.sp_axes if len(pctx.sp_axes) > 1 else pctx.sp_axes[0]
+
+    def local(a, b):
+        return chunked_linear_recurrence(a, b, axis_name=axis_name, axis=axis)
+
+    shard = jax.shard_map(
+        local, mesh=pctx.mesh, in_specs=(spec, spec), out_specs=spec,
+        check_vma=False,
+    )
+    return shard(a, b)

@@ -1,0 +1,70 @@
+"""Shared ring-shift helpers over one or two mesh axes.
+
+``flat_ring_shift`` moves every device's data to the device ``shift`` places
+later in the *flattened* rank order (outer axis major).  For a single axis
+this is one ``ppermute``; for two axes the wrap-around lanes of the inner
+shift additionally hop the outer axis — the pattern both the SP recurrence
+and halo-exchange window attention share.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["flat_ring_shift", "flat_rank", "flat_size", "ring_perm"]
+
+
+def ring_perm(P: int, shift: int):
+    return [(r, (r + shift) % P) for r in range(P)]
+
+
+def _axes_tuple(axis_name):
+    return (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+
+
+def flat_size(axis_name) -> int:
+    P = 1
+    for ax in _axes_tuple(axis_name):
+        P *= lax.psum(1, ax)
+    return P
+
+
+def flat_rank(axis_name):
+    rank = 0
+    for ax in _axes_tuple(axis_name):
+        rank = rank * lax.psum(1, ax) + lax.axis_index(ax)
+    return rank
+
+
+def flat_ring_shift(tree, axis_name, shift: int):
+    """Send each rank's data to rank ``(r + shift) % P`` in flattened order."""
+    axes = _axes_tuple(axis_name)
+
+    def shift_axis(t, ax, sh):
+        n = lax.psum(1, ax)
+        perm = ring_perm(int(n), sh)
+        return jax.tree.map(lambda x: lax.ppermute(x, ax, perm), t)
+
+    if len(axes) == 1:
+        return shift_axis(tree, axes[0], shift)
+    if len(axes) != 2:
+        raise NotImplementedError("flat_ring_shift supports 1 or 2 axes")
+
+    outer, inner = axes
+    M = int(lax.psum(1, inner))
+    shift = shift % (M * int(lax.psum(1, outer)))
+    outer_part, inner_part = divmod(shift, M)
+    t = tree
+    if inner_part:
+        shifted = shift_axis(t, inner, inner_part)
+        # Lanes whose inner index wrapped must hop one extra outer step.
+        hopped = shift_axis(shifted, outer, 1)
+        ii = lax.axis_index(inner)
+        t = jax.tree.map(
+            lambda a, b: jnp.where(ii < inner_part, b, a), shifted, hopped
+        )
+    if outer_part:
+        t = shift_axis(t, outer, outer_part)
+    return t

@@ -1,0 +1,68 @@
+"""Sequence-parallel decode attention (TokenRing's serving-side face).
+
+During decode the KV cache is enormous (up to 512k tokens here) and the query
+is a single token.  TokenRing's premise — *keep KV resident, move the small
+side* — becomes exact: the cache stays sequence-sharded forever, the 1-token
+Q is replicated, every device computes a partial ``(out, lse)`` against its
+cache shard with the flash kernel, and the partials are merged across the SP
+axes with the paper's Update() equations, realized as an lse-weighted
+``psum`` (distributed flash-decoding).
+
+Per-token communication: ``B * Hq * (D + 2)`` floats — independent of context
+length.  Ring Attention in the same role would rotate the cache itself.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.ops import flash_attention
+
+__all__ = ["sp_decode_attention"]
+
+
+def sp_decode_attention(
+    q,
+    k_cache,
+    v_cache,
+    k_pos,
+    *,
+    axis_names,
+    q_pos=None,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    impl: str = "auto",
+    block_k: int = 512,
+):
+    """Decode attention inside shard_map.
+
+    ``q``: (B, Sq, Hq, D) with small Sq (usually 1), replicated over the SP
+    axes.  ``k_cache``/``v_cache``: (B, S_loc, Hkv, D) sequence shards.
+    ``k_pos``: (B, S_loc) global positions; unwritten cache slots carry the
+    PAD_POS sentinel and are masked inside the kernel.
+    Returns (B, Sq, Hq, D), replicated over the SP axes.
+    """
+    B, Sq, Hq, D = q.shape
+    if q_pos is None:
+        # Caller should pass real positions; default to "after everything".
+        q_pos = jnp.full((B, Sq), 2**29 - 1, jnp.int32)
+
+    out, lse = flash_attention(
+        q, k_cache, v_cache, q_pos=q_pos, k_pos=k_pos, causal=causal,
+        window=window, scale=scale, impl=impl, block_q=max(Sq, 1),
+        block_k=block_k,
+    )
+    # Merge partials across the SP axes: out = sum_i w_i out_i / sum_i w_i,
+    # w_i = exp(lse_i - max_i lse_i).  Empty shards have lse = -inf -> w = 0.
+    m = lax.pmax(lse, axis_names)  # (B, Sq, Hq)
+    w = jnp.exp(jnp.where(jnp.isneginf(m), 0.0, lse - m))
+    w = jnp.where(jnp.isneginf(lse), 0.0, w)
+    num = lax.psum(w[..., None] * out.astype(jnp.float32), axis_names)
+    den = lax.psum(w, axis_names)
+    safe = den > 0.0
+    merged = num / jnp.where(safe, den, 1.0)[..., None]
+    merged = jnp.where(safe[..., None], merged, 0.0)
+    return merged.astype(q.dtype)

@@ -1,0 +1,94 @@
+"""Multi-pod hybrid: inter-pod Ring-Attention x intra-pod TokenRing.
+
+Paper Case Study III (Figure 5): "Ring Attention is employed for cross-node
+communication of K and V, while TokenRing is utilized within individual nodes".
+
+Mapping to the production mesh ``(pod, data, model)``:
+  * the sequence is sharded over ``(pod, model)`` jointly,
+  * the *outer* loop rotates each pod's whole local (K, V) shard across the
+    ``pod`` axis (one ppermute per pod step — the slow inter-pod links carry
+    the big, infrequent transfer),
+  * the *inner* computation is a full intra-pod TokenRing pass over ``model``
+    against whatever KV block is currently resident (fast intra-pod links
+    carry the frequent bidirectional Q/out traffic).
+
+Because TokenRing returns the accumulators to their home rank after every
+inner pass, merging across outer steps is local.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+from repro.core.merge import empty_partial, finalize, merge_partials
+from repro.core.ring_attention import ring_attention_sp
+from repro.core.token_ring import token_ring_sp
+from repro.core.ulysses import ulysses_sp
+
+__all__ = ["hybrid_sp"]
+
+
+def _ring_perm(P: int, shift: int):
+    return [(r, (r + shift) % P) for r in range(P)]
+
+
+_INNER = {
+    "tokenring": lambda **kw: token_ring_sp(variant="bidir", **kw),
+    "tokenring_faithful": lambda **kw: token_ring_sp(variant="faithful", **kw),
+    "ring": ring_attention_sp,
+    "ulysses": ulysses_sp,
+}
+
+
+def hybrid_sp(
+    q,
+    k,
+    v,
+    q_pos,
+    k_pos,
+    *,
+    pod_axis: str,
+    axis_name: str,
+    inner: str = "tokenring",
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    impl: str = "auto",
+    block_q: int = 512,
+    block_k: int = 512,
+    return_lse: bool = False,
+):
+    """Hybrid SP attention over (pod_axis, axis_name), inside shard_map."""
+    n_pods = lax.psum(1, pod_axis)
+    inner_fn = _INNER[inner]
+
+    def inner_pass(k_cur, v_cur, kp_cur):
+        return inner_fn(
+            q=q, k=k_cur, v=v_cur, q_pos=q_pos, k_pos=kp_cur,
+            axis_name=axis_name, causal=causal, window=window, scale=scale,
+            impl=impl, block_q=block_q, block_k=block_k, return_lse=True,
+        )
+
+    out, lse = empty_partial(q.shape)
+
+    def step(carry, _):
+        k_cur, v_cur, kp_cur, out, lse = carry
+        # Rotate KV to the next pod first so the (slow) inter-pod transfer
+        # overlaps the whole intra-pod TokenRing pass.
+        k_nxt, v_nxt, kp_nxt = jax.tree.map(
+            lambda x: lax.ppermute(x, pod_axis, _ring_perm(n_pods, 1)),
+            (k_cur, v_cur, kp_cur),
+        )
+        o, l = inner_pass(k_cur, v_cur, kp_cur)
+        out, lse = merge_partials(out, lse, o, l)
+        return (k_nxt, v_nxt, kp_nxt, out, lse), None
+
+    carry = (k, v, k_pos, out, lse)
+    if n_pods > 1:
+        carry, _ = lax.scan(step, carry, None, length=n_pods - 1)
+    k_cur, v_cur, kp_cur, out, lse = carry
+    o, l = inner_pass(k_cur, v_cur, kp_cur)
+    out, lse = merge_partials(out, lse, o, l)
+    out, lse = finalize(out, lse)
+    return (out, lse) if return_lse else out

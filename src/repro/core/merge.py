@@ -1,0 +1,118 @@
+"""Online-softmax partial-attention merging — the paper's ``Update()`` function.
+
+TokenRing (and Ring Attention, and flash-decoding) all decompose attention over
+key/value blocks.  Each block produces a partial ``(block_out, block_lse)``:
+
+    block_out[b, s, h, :] = softmax(scores over this KV block) @ V_block
+    block_lse[b, s, h]    = logsumexp(scores over this KV block)
+
+Partials are combined with the numerically-stable online-softmax update.  The
+paper (§3.1) writes it as
+
+    out = out - sigmoid(block_lse - lse) * (out - block_out)
+    lse = lse - log(sigmoid(lse - block_lse))
+
+which is algebraically ``logaddexp`` weighting.  We implement a stable form that
+additionally tolerates *empty* partials (``lse = -inf``, ``out = 0``) — these
+occur for fully-masked causal blocks — and verify equivalence with the paper's
+sigmoid form in tests.
+
+Conventions used throughout the framework:
+  * ``out``: ``(..., S, H, D)`` (any leading batch dims), value dtype.
+  * ``lse``: ``(..., S, H)`` float32.
+  * an "empty" partial is ``(out=0, lse=-inf)``; merging with it is a no-op.
+
+The merge is associative and commutative (tested by hypothesis), which is what
+permits TokenRing to merge partials in ring-arrival order rather than
+sequence order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "empty_partial",
+    "merge_partials",
+    "merge_partials_paper_form",
+    "merge_many",
+    "finalize",
+]
+
+
+def empty_partial(shape_out, dtype=jnp.float32):
+    """Identity element for the merge: ``out = 0``, ``lse = -inf``.
+
+    ``shape_out`` is the full output shape ``(..., S, H, D)``.
+    """
+    out = jnp.zeros(shape_out, dtype=dtype)
+    lse = jnp.full(shape_out[:-1], -jnp.inf, dtype=jnp.float32)
+    return out, lse
+
+
+def merge_partials(out_a, lse_a, out_b, lse_b):
+    """Combine two attention partials; stable for ``lse = -inf`` inputs.
+
+    Accumulation happens in float32 regardless of ``out`` dtype; the result is
+    cast back to ``out_a.dtype``.
+    """
+    lse_a = lse_a.astype(jnp.float32)
+    lse_b = lse_b.astype(jnp.float32)
+    # -inf-safe *and* grad-safe formulation.  The naive
+    # ``exp(lse_a - logaddexp(lse_a, lse_b))`` produces nan *gradients* on
+    # empty lanes (exp evaluated at nan x zero cotangent = nan), so every
+    # non-finite lane is routed through the double-where trick: the input to
+    # exp/log is replaced by a constant before the transcendental is applied.
+    neg_a = jnp.isneginf(lse_a)
+    neg_b = jnp.isneginf(lse_b)
+    both_empty = jnp.logical_and(neg_a, neg_b)
+    m = jnp.maximum(lse_a, lse_b)
+    m_safe = jnp.where(both_empty, 0.0, m)
+    ea = jnp.exp(jnp.where(neg_a, -jnp.inf, jnp.where(neg_a, 0.0, lse_a) - m_safe))
+    eb = jnp.exp(jnp.where(neg_b, -jnp.inf, jnp.where(neg_b, 0.0, lse_b) - m_safe))
+    denom = ea + eb
+    denom_safe = jnp.where(both_empty, 1.0, denom)
+    lse = jnp.where(both_empty, -jnp.inf, m_safe + jnp.log(denom_safe))
+    w_a = ea / denom_safe
+    w_b = eb / denom_safe
+    out32 = (
+        w_a[..., None] * out_a.astype(jnp.float32)
+        + w_b[..., None] * out_b.astype(jnp.float32)
+    )
+    return out32.astype(out_a.dtype), lse
+
+
+def merge_partials_paper_form(out, lse, block_out, block_lse):
+    """The paper's exact update equations (§3.1), for fidelity testing.
+
+        out = out - sigmoid(block_lse - lse) * (out - block_out)
+        lse = lse - log(sigmoid(lse - block_lse))
+
+    Not -inf-safe in general (the paper assumes non-degenerate partials); used
+    as the oracle for equivalence with :func:`merge_partials` on finite inputs.
+    """
+    lse = lse.astype(jnp.float32)
+    block_lse = block_lse.astype(jnp.float32)
+    sig = jax.nn.sigmoid(block_lse - lse)[..., None]
+    new_out = out - sig * (out - block_out)
+    new_lse = lse - jax.nn.log_sigmoid(lse - block_lse)
+    return new_out.astype(out.dtype), new_lse
+
+
+def merge_many(partials):
+    """Fold an iterable of ``(out, lse)`` partials left-to-right."""
+    partials = list(partials)
+    out, lse = partials[0]
+    for o, l in partials[1:]:
+        out, lse = merge_partials(out, lse, o, l)
+    return out, lse
+
+
+def finalize(out, lse):
+    """Zero out rows that attended to nothing (lse == -inf).
+
+    A fully-masked query row has an undefined softmax; the framework-wide
+    convention is a zero output vector for such rows.
+    """
+    return jnp.where(jnp.isneginf(lse)[..., None], 0.0, out).astype(out.dtype), lse

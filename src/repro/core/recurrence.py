@@ -1,0 +1,109 @@
+"""Sequence-parallel diagonal linear recurrences (SSM / RG-LRU substrate).
+
+TokenRing is an *attention* schedule; for the attention-free architectures in
+the assignment (falcon-mamba's selective SSM, recurrentgemma's RG-LRU) the
+analogous sequence-parallel primitive is a distributed prefix scan of
+
+    h_t = a_t * h_{t-1} + b_t          (elementwise / diagonal transition)
+
+with the sequence sharded **contiguously** across the SP axis.  Three phases:
+
+  1. local inclusive associative scan (``jax.lax.associative_scan``) — gives
+     each chunk's outputs under a zero initial state plus the chunk summary
+     ``(A_prod, h_last)``;
+  2. :func:`device_exclusive_scan` of the summaries *across devices*:
+     Hillis-Steele doubling with ``lax.ppermute`` (log2 P neighbor rounds,
+     the same neighbor-only communication discipline as TokenRing);
+  3. local fix-up: ``h_t += A_cum_t * h_in`` using the cumulative products
+     already produced by phase 1 — no recomputation.
+
+Communication per device: ``log2(P) * |state|`` bytes, vs the O(S) activation
+traffic attention SP needs — recorded in DESIGN.md §Arch-applicability.
+
+``models.mamba`` uses :func:`device_exclusive_scan` directly with a chunked
+local scan so the (B, S, d_inner, d_state) tensor is never materialized.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.collectives import flat_rank, flat_ring_shift, flat_size
+
+__all__ = [
+    "chunked_linear_recurrence",
+    "local_linear_recurrence",
+    "device_exclusive_scan",
+]
+
+
+def _combine(left, right):
+    """Compose two (a, b) affine transforms: right after left."""
+    a1, b1 = left
+    a2, b2 = right
+    return a1 * a2, a2 * b1 + b2
+
+
+def local_linear_recurrence(a, b, h0=None, axis: int = 1):
+    """Single-device inclusive scan of ``h_t = a_t h_{t-1} + b_t``.
+
+    ``a``/``b``: (..., S, ...state dims) with time on ``axis``.
+    Returns ``(h, (A_prod, h_last))``.
+    """
+    A_cum, h = lax.associative_scan(_combine, (a, b), axis=axis)
+    if h0 is not None:
+        h = h + A_cum * jnp.expand_dims(h0, axis)
+    idx = [slice(None)] * h.ndim
+    idx[axis] = -1
+    A_last = A_cum[tuple(idx)]
+    h_last = h[tuple(idx)]
+    return h, (A_last, h_last)
+
+
+def device_exclusive_scan(summary, axis_name):
+    """Exclusive prefix-combine of per-device ``(A_prod, h_last)`` summaries.
+
+    Device ``r`` receives the composition of devices ``0..r-1`` (identity for
+    rank 0).  Inside shard_map; ``axis_name`` may be a tuple (pod-major).
+    Hillis-Steele doubling: ``ceil(log2 P)`` neighbor ppermute rounds.
+    """
+    P = int(flat_size(axis_name))
+    rank = flat_rank(axis_name)
+    if P == 1:
+        return jnp.ones_like(summary[0]), jnp.zeros_like(summary[1])
+
+    incl = summary
+    dist = 1
+    while dist < P:
+        recv = flat_ring_shift(incl, axis_name, dist)
+        combined = _combine(recv, incl)
+        use = rank >= dist
+        incl = jax.tree.map(lambda c, o: jnp.where(use, c, o), combined, incl)
+        dist *= 2
+
+    excl = flat_ring_shift(incl, axis_name, 1)
+    ident = (jnp.ones_like(summary[0]), jnp.zeros_like(summary[1]))
+    return jax.tree.map(lambda e, i: jnp.where(rank >= 1, e, i), excl, ident)
+
+
+def chunked_linear_recurrence(a, b, *, axis_name, axis: int = 1):
+    """Sequence-parallel scan inside shard_map (contiguous layout).
+
+    ``axis_name`` may be a single mesh axis or a tuple (e.g. ("pod","model"))
+    — device rank order must match sequence chunk order.
+    Returns ``h`` with the same local shape as ``b``.
+    """
+    # Phase 1: local scan with zero init; keep cumulative products for fixup.
+    A_cum, h_local = lax.associative_scan(_combine, (a, b), axis=axis)
+    idx = [slice(None)] * h_local.ndim
+    idx[axis] = -1
+    summary = (A_cum[tuple(idx)], h_local[tuple(idx)])
+
+    if int(flat_size(axis_name)) == 1:
+        return h_local
+
+    # Phase 2: exclusive device scan; Phase 3: local fix-up.
+    _, h_in = device_exclusive_scan(summary, axis_name)
+    return h_local + A_cum * jnp.expand_dims(h_in, axis)

@@ -1,0 +1,155 @@
+"""Ring Attention baselines (paper Figure 3a + the bidirectional-KV variant).
+
+Both functions run *inside* ``shard_map``: they receive the local sequence
+shard of q/k/v plus the global positions of the local rows, and communicate
+over ``axis_name`` with ``lax.ppermute``.
+
+``ring_attention_sp``  — the paper's baseline: Q stays home, the (K,V) pair
+rotates one step (+1) per iteration.  Exactly one ring direction is used —
+this is the inefficiency TokenRing attacks.
+
+``ring_attention_bidir_sp`` — beyond-paper variant used by the auto-chooser:
+the KV shard is split in half, one half rotates ``+1`` while the other rotates
+``-1``.  Both link directions carry ``(K+V)/2`` per step, halving effective
+communication time on full-duplex ICI.  Under GQA (KV much smaller than Q)
+this beats rotating Q+out, which is why the strategy chooser prefers it there.
+
+Communication accounting per device (bytes, ``b`` = element size):
+    ring        : (P-1) * 2*S_loc*Hkv*D*b      one direction only
+    ring_bidir  : (P-1) *   S_loc*Hkv*D*b      per direction (both busy)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.merge import empty_partial, finalize, merge_partials
+from repro.kernels.ops import flash_attention
+
+__all__ = ["ring_attention_sp", "ring_attention_bidir_sp"]
+
+
+def _ring_perm(P: int, shift: int):
+    """Permutation sending rank r's data to rank (r + shift) % P."""
+    return [(r, (r + shift) % P) for r in range(P)]
+
+
+def _ppermute_tree(tree, axis_name, perm):
+    return jax.tree.map(lambda x: lax.ppermute(x, axis_name, perm), tree)
+
+
+def ring_attention_sp(
+    q,
+    k,
+    v,
+    q_pos,
+    k_pos,
+    *,
+    axis_name: str,
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    impl: str = "auto",
+    block_q: int = 512,
+    block_k: int = 512,
+    return_lse: bool = False,
+):
+    """Classic Ring Attention: KV rotates +1, (P-1) unidirectional sends."""
+    P = lax.psum(1, axis_name)  # static under shard_map
+
+    def flash(qq, kk, vv, qp, kp):
+        return flash_attention(
+            qq, kk, vv, q_pos=qp, k_pos=kp, causal=causal, window=window,
+            scale=scale, impl=impl, block_q=block_q, block_k=block_k,
+        )
+
+    out, lse = empty_partial(q.shape)
+
+    def step(carry, _):
+        k_cur, v_cur, kp_cur, out, lse = carry
+        # Issue the rotation first so XLA can overlap the ICI DMA with the
+        # block compute (the paper's async_send / compute overlap).
+        k_nxt, v_nxt, kp_nxt = _ppermute_tree(
+            (k_cur, v_cur, kp_cur), axis_name, _ring_perm(P, 1)
+        )
+        o, l = flash(q, k_cur, v_cur, q_pos, kp_cur)
+        out, lse = merge_partials(out, lse, o, l)
+        return (k_nxt, v_nxt, kp_nxt, out, lse), None
+
+    if P > 1:
+        (k_cur, v_cur, kp_cur, out, lse), _ = lax.scan(
+            step, (k, v, k_pos, out, lse), None, length=P - 1
+        )
+    else:
+        k_cur, v_cur, kp_cur = k, v, k_pos
+    # Final block: no rotation needed afterwards.
+    o, l = flash(q, k_cur, v_cur, q_pos, kp_cur)
+    out, lse = merge_partials(out, lse, o, l)
+    out, lse = finalize(out, lse)
+    return (out, lse) if return_lse else out
+
+
+def ring_attention_bidir_sp(
+    q,
+    k,
+    v,
+    q_pos,
+    k_pos,
+    *,
+    axis_name: str,
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    impl: str = "auto",
+    block_q: int = 512,
+    block_k: int = 512,
+    return_lse: bool = False,
+):
+    """Bidirectional-KV ring: half the KV shard travels each direction."""
+    P = lax.psum(1, axis_name)
+    S = k.shape[1]
+    assert S % 2 == 0, "bidirectional ring needs an even local KV length"
+    half = S // 2
+
+    def flash(qq, kk, vv, qp, kp):
+        return flash_attention(
+            qq, kk, vv, q_pos=qp, k_pos=kp, causal=causal, window=window,
+            scale=scale, impl=impl, block_q=block_q, block_k=block_k,
+        )
+
+    ka, kb = k[:, :half], k[:, half:]
+    va, vb = v[:, :half], v[:, half:]
+    kpa, kpb = k_pos[:, :half], k_pos[:, half:]
+
+    out, lse = empty_partial(q.shape)
+
+    def step(carry, _):
+        (ka, va, kpa, kb, vb, kpb, out, lse) = carry
+        fwd = _ppermute_tree((ka, va, kpa), axis_name, _ring_perm(P, 1))
+        bwd = _ppermute_tree((kb, vb, kpb), axis_name, _ring_perm(P, -1))
+        o, l = flash(
+            q,
+            jnp.concatenate([ka, kb], axis=1),
+            jnp.concatenate([va, vb], axis=1),
+            q_pos,
+            jnp.concatenate([kpa, kpb], axis=1),
+        )
+        out, lse = merge_partials(out, lse, o, l)
+        return (*fwd, *bwd, out, lse), None
+
+    carry = (ka, va, kpa, kb, vb, kpb, out, lse)
+    if P > 1:
+        carry, _ = lax.scan(step, carry, None, length=P - 1)
+    (ka, va, kpa, kb, vb, kpb, out, lse) = carry
+    o, l = flash(
+        q,
+        jnp.concatenate([ka, kb], axis=1),
+        jnp.concatenate([va, vb], axis=1),
+        q_pos,
+        jnp.concatenate([kpa, kpb], axis=1),
+    )
+    out, lse = merge_partials(out, lse, o, l)
+    out, lse = finalize(out, lse)
+    return (out, lse) if return_lse else out

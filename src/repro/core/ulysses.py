@@ -1,0 +1,77 @@
+"""DeepSpeed-Ulysses style all-to-all head-parallel attention (baseline).
+
+Inside ``shard_map``: the sequence-sharded q/k/v are all-to-all'd so every
+device holds *all* tokens for a ``1/P`` slice of the heads, attention runs
+fully local, then the output is all-to-all'd back to sequence sharding.
+
+The paper's Table-1 limitation is explicit here: the SP degree cannot exceed
+the number of (KV) heads — ``ulysses_sp`` raises for invalid configurations
+and the strategy auto-chooser falls back to TokenRing, which is exactly the
+GQA/MQA scenario the paper positions TokenRing for.
+
+Communication per device: 4 all-to-alls moving ``S_loc*H*D*b`` each
+(q, k, v in; out back) — constant in P, but all-to-all on a torus is the most
+congestion-prone collective.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.ops import flash_attention
+
+__all__ = ["ulysses_sp"]
+
+
+def ulysses_sp(
+    q,
+    k,
+    v,
+    q_pos,
+    k_pos,
+    *,
+    axis_name: str,
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    impl: str = "auto",
+    block_q: int = 512,
+    block_k: int = 512,
+    return_lse: bool = False,
+):
+    P = lax.psum(1, axis_name)
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    if Hq % P or Hkv % P:
+        raise ValueError(
+            f"Ulysses needs head counts divisible by the SP degree: "
+            f"Hq={Hq}, Hkv={Hkv}, P={P} (the paper's Table-1 limitation)"
+        )
+
+    def seq_to_head(x):
+        # (B, S_loc, H, D) -> (B, S_loc * P, H / P, D)
+        return lax.all_to_all(x, axis_name, split_axis=2, concat_axis=1, tiled=True)
+
+    def head_to_seq(x):
+        return lax.all_to_all(x, axis_name, split_axis=1, concat_axis=2, tiled=True)
+
+    qh = seq_to_head(q)
+    kh = seq_to_head(k)
+    vh = seq_to_head(v)
+    # Positions of the gathered sequence: concatenation of every rank's local
+    # positions in rank order along the seq dim (matches all_to_all's order).
+    qp_all = lax.all_gather(q_pos, axis_name, axis=1, tiled=True)
+    kp_all = lax.all_gather(k_pos, axis_name, axis=1, tiled=True)
+
+    out, lse = flash_attention(
+        qh, kh, vh, q_pos=qp_all, k_pos=kp_all, causal=causal, window=window,
+        scale=scale, impl=impl, block_q=block_q, block_k=block_k,
+    )
+    out = head_to_seq(out)
+    if not return_lse:
+        return out
+    # lse: (B, S, Hq/P) head-sharded -> back to seq-sharded (B, S_loc, Hq).
+    lse = lax.all_to_all(lse[..., None], axis_name, split_axis=1, concat_axis=2, tiled=True)[..., 0]
+    return out, lse

@@ -1,0 +1,61 @@
+"""Halo-exchange sequence-parallel sliding-window attention.
+
+For local attention with window ``W`` and contiguous layout, a device holding
+``S_loc`` tokens only needs the last ``W-1`` tokens of its predecessors —
+``ceil((W-1)/S_loc)`` neighbor shards.  Rotating the whole KV around the ring
+(TokenRing / Ring-Attention) would waste (P - halo) of the circulation, so
+this strategy fetches exactly the halo with that many ``+1`` ring shifts and
+runs one windowed flash call.  Used by recurrentgemma's local-attention layers
+and any ``window=`` config; requires ``layout="contig"``.
+
+Communication per device: ``halo * 2*S_loc*Hkv*D*b`` — independent of P.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.collectives import flat_ring_shift, flat_size
+from repro.kernels.ops import flash_attention
+
+__all__ = ["window_attention_sp"]
+
+
+def window_attention_sp(
+    q,
+    k,
+    v,
+    q_pos,
+    k_pos,
+    *,
+    axis_name,  # str or tuple of axes (pod, model)
+    window: int,
+    causal: bool = True,
+    scale: float | None = None,
+    impl: str = "auto",
+    block_q: int = 512,
+    block_k: int = 512,
+    return_lse: bool = False,
+):
+    P = flat_size(axis_name)
+    S_loc = k.shape[1]
+    halo = min(int(P) - 1, -(-(window - 1) // S_loc))  # ceil, capped at P-1
+
+    ks, vs, kps = [k], [v], [k_pos]
+    blk = (k, v, k_pos)
+    for _ in range(halo):
+        # +1 flat shift: every rank receives its predecessor's shard.
+        blk = flat_ring_shift(blk, axis_name, 1)
+        ks.insert(0, blk[0])
+        vs.insert(0, blk[1])
+        kps.insert(0, blk[2])
+
+    k_ext = jnp.concatenate(ks, axis=1)
+    v_ext = jnp.concatenate(vs, axis=1)
+    kp_ext = jnp.concatenate(kps, axis=1)
+
+    out, lse = flash_attention(
+        q, k_ext, v_ext, q_pos=q_pos, k_pos=kp_ext, causal=causal,
+        window=window, scale=scale, impl=impl, block_q=block_q, block_k=block_k,
+    )
+    return (out, lse) if return_lse else out

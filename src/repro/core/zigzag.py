@@ -1,0 +1,114 @@
+"""Zigzag causal load balancing (paper §3.3.2).
+
+Under causal attention, naively sharding the sequence into ``P`` contiguous
+chunks gives device 0 almost no work and device ``P-1`` the full quadratic
+cost.  The zigzag layout (Zhu 2024, adopted by the paper) splits the sequence
+into ``2P`` chunks and assigns device ``j`` the pair ``(j, 2P-1-j)`` — an early
+chunk and a late chunk — so every device owns the same causal workload (the
+pair's combined causal area is constant in ``j``).
+
+We implement the layout as *global position bookkeeping*: every sharded tensor
+keeps its natural order within each device; masking is always derived from the
+global token positions (``zigzag_positions``), which makes every SP strategy
+(ring / token-ring / ulysses / hybrid) correct under any layout, and lets the
+Pallas kernel skip fully-masked tiles by comparing tile position ranges.
+
+Terminology:
+  * ``P``      — number of sequence shards (devices along the SP axes).
+  * ``S``      — global sequence length; chunk size ``C = S / (2P)``.
+  * "contig"   — plain contiguous layout (device j owns ``[jS/P, (j+1)S/P)``),
+                 used for non-causal attention where load is already uniform.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "zigzag_chunk_ids",
+    "zigzag_device_order",
+    "to_zigzag",
+    "from_zigzag",
+    "zigzag_positions",
+    "contig_positions",
+    "block_kind",
+    "BLOCK_EMPTY",
+    "BLOCK_DIAG",
+    "BLOCK_FULL",
+]
+
+# Block mask kinds between a query chunk and a key chunk (global chunk ids):
+BLOCK_EMPTY = 0  # q chunk strictly before k chunk — fully masked, skippable
+BLOCK_DIAG = 1  # same chunk — lower-triangular mask
+BLOCK_FULL = 2  # q chunk strictly after k chunk — no mask
+
+
+def zigzag_chunk_ids(P: int):
+    """Global chunk ids ``(early, late)`` owned by each device ``j``."""
+    return [(j, 2 * P - 1 - j) for j in range(P)]
+
+
+def zigzag_device_order(P: int) -> np.ndarray:
+    """Permutation mapping zigzag-ordered chunks back to global chunk order.
+
+    Returns an array ``perm`` of length ``2P`` where entry ``i`` is the global
+    chunk id stored at zigzag slot ``i`` (slots are device-major: device j
+    holds slots ``2j`` and ``2j+1``).
+    """
+    order = []
+    for j in range(P):
+        order += [j, 2 * P - 1 - j]
+    return np.asarray(order)
+
+
+def to_zigzag(x, P: int, axis: int = 1):
+    """Reorder a *global* sequence tensor from contiguous to zigzag layout.
+
+    After this reordering, an even split over ``axis`` into ``P`` parts gives
+    each device its ``(j, 2P-1-j)`` chunk pair.
+    """
+    S = x.shape[axis]
+    assert S % (2 * P) == 0, f"seq {S} not divisible by 2P={2 * P}"
+    order = zigzag_device_order(P)
+    xs = jnp.split(x, 2 * P, axis=axis)
+    return jnp.concatenate([xs[int(c)] for c in order], axis=axis)
+
+
+def from_zigzag(x, P: int, axis: int = 1):
+    """Inverse of :func:`to_zigzag`."""
+    S = x.shape[axis]
+    assert S % (2 * P) == 0
+    order = zigzag_device_order(P)
+    inv = np.empty_like(order)
+    inv[order] = np.arange(2 * P)
+    xs = jnp.split(x, 2 * P, axis=axis)
+    return jnp.concatenate([xs[int(c)] for c in inv], axis=axis)
+
+
+def zigzag_positions(S: int, P: int, j):
+    """Global token positions held by device ``j`` in zigzag layout.
+
+    ``j`` may be a traced scalar (``lax.axis_index``); returns ``(S/P,)`` int32.
+    """
+    assert S % (2 * P) == 0
+    C = S // (2 * P)
+    base = jnp.arange(C, dtype=jnp.int32)
+    early = j * C + base
+    late = (2 * P - 1 - j) * C + base
+    return jnp.concatenate([early, late])
+
+
+def contig_positions(S: int, P: int, j):
+    """Global token positions for the contiguous layout."""
+    L = S // P
+    return j * L + jnp.arange(L, dtype=jnp.int32)
+
+
+def block_kind(q_chunk: int, k_chunk: int) -> int:
+    """Mask kind between two global chunk ids under causal attention."""
+    if q_chunk > k_chunk:
+        return BLOCK_FULL
+    if q_chunk == k_chunk:
+        return BLOCK_DIAG
+    return BLOCK_EMPTY

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the per-device flash-attention hot spot."""
+
+from repro.kernels.ops import FlashConfig, flash_attention
+
+__all__ = ["flash_attention", "FlashConfig"]

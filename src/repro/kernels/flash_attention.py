@@ -1,0 +1,222 @@
+"""Flash-attention forward Pallas TPU kernel.
+
+This is the per-device block compute of every TokenRing / Ring-Attention step
+(the paper's ``Attention(Q_j^i, K_j, V_j)`` producing ``block_out, block_lse``).
+
+TPU-native design decisions (vs the CUDA FlashAttention-2 the paper calls):
+  * Tiling is expressed through ``BlockSpec``s: HBM->VMEM movement is done by
+    the Mosaic pipeline, not hand-rolled ``cp.async`` as on GPU.
+  * Grid is ``(B, Hq, num_q_blocks, num_kv_blocks)`` with the KV dimension
+    marked ``arbitrary`` (sequential): the online-softmax state for one
+    (b, h, q-block) lives in VMEM scratch across consecutive KV-grid steps —
+    the TPU analogue of a CUDA thread-block's register accumulator.
+  * ``(block_q, MXU_LANE)`` shaped running max / denominator scratch keeps the
+    state layout lane-aligned (8x128 tiles), matching MXU-friendly shapes.
+  * Masking is *position-based*: the kernel receives the global token position
+    of every query/key row, so contiguous, zigzag (causal load-balanced) and
+    ring-rotated layouts all use the same kernel.  Fully-masked tiles are
+    skipped via ``pl.when`` (this is what makes zigzag-causal cost ~half of
+    full-matrix attention instead of just masking it).
+
+GQA is handled in the index maps (KV head = query head // group) so KV blocks
+are fetched once per query-head group without materializing repeats.
+
+Returns ``(out, lse)`` — the partials TokenRing circulates.
+
+Validated against ``ref.py`` in interpret mode (CPU) across shape/dtype sweeps
+in ``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd_pallas", "PAD_POS"]
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+# Sentinel position for padded KV rows; anything >= PAD_POS/2 is masked out.
+PAD_POS = 2**30
+MXU_LANE = 128
+
+
+def _fwd_kernel(
+    # per-batch position arrays are regular VMEM refs here (see BlockSpecs)
+    q_pos_ref,  # (1, block_q)      int32  global positions of this q tile
+    k_pos_ref,  # (1, block_k)      int32  global positions of this kv tile
+    q_ref,  # (1, block_q, 1, D) in q.dtype
+    k_ref,  # (1, block_k, 1, D)
+    v_ref,  # (1, block_k, 1, D)
+    out_ref,  # (1, block_q, 1, D)
+    lse_ref,  # (1, block_q, 1)    float32
+    acc_ref,  # VMEM scratch (block_q, D)        float32
+    m_ref,  # VMEM scratch (block_q, MXU_LANE) float32 (lane-replicated)
+    l_ref,  # VMEM scratch (block_q, MXU_LANE) float32
+    *,
+    causal: bool,
+    window: int | None,
+    scale: float,
+    num_kv_blocks: int,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = q_pos_ref[0, :]  # (bq,)
+    k_pos = k_pos_ref[0, :]  # (bk,)
+
+    # Tile-level skip: under causal masking a tile whose every key position is
+    # later than every query position (or is padding) contributes nothing.
+    k_min = jnp.min(k_pos)
+    q_max = jnp.max(q_pos)
+    all_pad = k_min >= PAD_POS // 2
+    if causal:
+        skip = jnp.logical_or(q_max < k_min, all_pad)
+    else:
+        skip = all_pad
+    if window is not None:
+        # Tile entirely left of every query's window start is dead too.
+        q_min = jnp.min(q_pos)
+        k_max = jnp.max(k_pos)
+        skip = jnp.logical_or(skip, k_max <= q_min - window)
+
+    @pl.when(jnp.logical_not(skip))
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+
+        mask = k_pos[None, :] < PAD_POS // 2
+        if causal:
+            mask = jnp.logical_and(mask, q_pos[:, None] >= k_pos[None, :])
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos[:, None] - k_pos[None, :] < window)
+        scores = jnp.where(mask, scores, NEG_INF)
+
+        m_prev = m_ref[:, 0]  # (bq,)
+        l_prev = l_ref[:, 0]  # (bq,)
+        m_cur = jnp.max(scores, axis=-1)  # (bq,)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Rows still fully masked keep m_new == NEG_INF; make exp() produce 0
+        # without generating inf-inf NaNs.
+        safe_m = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(scores - safe_m[:, None])  # (bq, bk)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(jnp.minimum(m_prev - safe_m, 0.0))
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+        acc_ref[...] = acc
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        m = m_ref[:, 0]
+        l = l_ref[:, 0]
+        valid = l > 0.0
+        denom = jnp.where(valid, l, 1.0)
+        out = acc_ref[...] / denom[:, None]
+        out = jnp.where(valid[:, None], out, 0.0)
+        out_ref[0, :, 0, :] = out.astype(out_ref.dtype)
+        lse = jnp.where(valid, m + jnp.log(denom), -jnp.inf)
+        lse_ref[0, :, 0] = lse
+
+
+def flash_attention_fwd_pallas(
+    q,
+    k,
+    v,
+    q_pos,
+    k_pos,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """Pallas flash-attention forward.
+
+    Shapes: ``q (B,Sq,Hq,D)``, ``k/v (B,Sk,Hkv,D)``, ``q_pos (B,Sq) int32``,
+    ``k_pos (B,Sk) int32`` (per-batch positions enable continuous-batching
+    decode).  ``Sq % block_q == 0`` and ``Sk % block_k == 0`` must hold (the
+    ``ops`` wrapper pads).  Returns ``(out, lse)`` with ``out (B,Sq,Hq,D)`` in
+    q.dtype and ``lse (B,Sq,Hq)`` float32.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, Dk = k.shape
+    assert Dk == D and v.shape == k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+
+    kernel = functools.partial(
+        _fwd_kernel,
+        causal=causal,
+        window=window,
+        scale=float(scale),
+        num_kv_blocks=nk,
+    )
+
+    grid = (B, Hq, nq, nk)
+    out_shape = [
+        jax.ShapeDtypeStruct((B, Sq, Hq, D), q.dtype),
+        jax.ShapeDtypeStruct((B, Sq, Hq), jnp.float32),
+    ]
+    in_specs = [
+        pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (b, iq)),  # q_pos
+        pl.BlockSpec((1, block_k), lambda b, h, iq, ik: (b, ik)),  # k_pos
+        pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),  # q
+        pl.BlockSpec(
+            (1, block_k, 1, D), lambda b, h, iq, ik: (b, ik, h // group, 0)
+        ),  # k
+        pl.BlockSpec(
+            (1, block_k, 1, D), lambda b, h, iq, ik: (b, ik, h // group, 0)
+        ),  # v
+    ]
+    out_specs = [
+        pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+        pl.BlockSpec((1, block_q, 1), lambda b, h, iq, ik: (b, iq, h)),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((block_q, D), jnp.float32),
+        pltpu.VMEM((block_q, MXU_LANE), jnp.float32),
+        pltpu.VMEM((block_q, MXU_LANE), jnp.float32),
+    ]
+
+    call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    out, lse = call(q_pos, k_pos, q, k, v)
+    return out, lse

@@ -1,0 +1,280 @@
+"""Jitted public wrapper around the flash-attention kernel.
+
+``flash_attention`` dispatches between:
+  * ``impl="pallas"``            — the Pallas TPU kernel (real hardware),
+  * ``impl="pallas_interpret"``  — same kernel body, interpreted on CPU
+                                   (used by the correctness tests),
+  * ``impl="xla"``               — a scan-over-KV-blocks pure-jnp flash
+                                   (O(block) memory, used for CPU runs and for
+                                   the 512-device dry-run compile where Mosaic
+                                   isn't available),
+  * ``impl="auto"``              — pallas on TPU, xla elsewhere.
+
+All impls return the TokenRing partials ``(out, lse)`` and share one
+``custom_vjp``: the backward pass is a blockwise recompute (flash-style, no
+O(S^2) residuals) written directly in jnp, so training works for every impl
+today; a Pallas backward kernel can later slot into ``_flash_bwd`` without
+touching callers.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import PAD_POS, flash_attention_fwd_pallas
+from repro.kernels.ref import normalize_positions
+
+__all__ = ["flash_attention", "FlashConfig"]
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+@dataclass(frozen=True)
+class FlashConfig:
+    causal: bool = False
+    window: int | None = None
+    scale: float | None = None
+    block_q: int = 512
+    block_k: int = 512
+    impl: str = "auto"  # auto | pallas | pallas_interpret | xla
+
+    def resolve_impl(self) -> str:
+        if self.impl != "auto":
+            return self.impl
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _pick_block(s: int, target: int) -> int:
+    """Largest power-of-two block <= target dividing s (s itself if small)."""
+    b = min(target, s)
+    while s % b:
+        b //= 2
+    return max(b, 1)
+
+
+# ---------------------------------------------------------------------------
+# XLA (pure jnp) flash forward: scan over KV blocks, O(block) memory.
+# ---------------------------------------------------------------------------
+
+
+def _xla_flash_fwd(cfg: FlashConfig, q, k, v, q_pos, k_pos):
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    group = Hq // Hkv
+    scale = cfg.scale if cfg.scale is not None else 1.0 / (D**0.5)
+    bk = _pick_block(Sk, cfg.block_k)
+    nk = Sk // bk
+
+    qf = q.astype(jnp.float32) * scale  # (B,Sq,Hq,D)
+    # reshape kv into blocks: (nk, B, bk, Hkv, D)
+    kb = jnp.moveaxis(k.reshape(B, nk, bk, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bk, Hkv, D), 1, 0)
+    kpb = jnp.moveaxis(k_pos.reshape(B, nk, bk), 1, 0)  # (nk, B, bk)
+
+    acc0 = jnp.zeros((B, Hq, Sq, D), jnp.float32)
+    m0 = jnp.full((B, Hq, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kb_, vb_, kp_ = blk
+        if group > 1:
+            kb_ = jnp.repeat(kb_, group, axis=2)
+            vb_ = jnp.repeat(vb_, group, axis=2)
+        scores = jnp.einsum(
+            "bqhd,bkhd->bhqk", qf, kb_.astype(jnp.float32)
+        )  # (B,Hq,Sq,bk)
+        mask = kp_[:, None, :] < PAD_POS // 2  # (B, 1, bk)
+        mask = jnp.broadcast_to(mask, (B, Sq, kp_.shape[-1]))
+        if cfg.causal:
+            mask = jnp.logical_and(mask, q_pos[:, :, None] >= kp_[:, None, :])
+        if cfg.window is not None:
+            mask = jnp.logical_and(
+                mask, q_pos[:, :, None] - kp_[:, None, :] < cfg.window
+            )
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        m_cur = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        safe_m = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(scores - safe_m[..., None])
+        p = jnp.where(mask[:, None], p, 0.0)
+        alpha = jnp.exp(jnp.minimum(m - safe_m, 0.0))
+        alpha = jnp.where(m <= NEG_INF / 2, 0.0, alpha)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb_.astype(jnp.float32)
+        )
+        return (acc_new, m_new, l_new), None
+
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kb, vb, kpb))
+    valid = l > 0.0
+    out = acc / jnp.where(valid, l, 1.0)[..., None]
+    out = jnp.where(valid[..., None], out, 0.0)
+    lse = jnp.where(valid, m + jnp.log(jnp.where(valid, l, 1.0)), -jnp.inf)
+    # (B,Hq,Sq,*) -> (B,Sq,Hq,*)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype), lse.transpose(0, 2, 1)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise backward (flash-style recompute), shared by all impls.
+# ---------------------------------------------------------------------------
+
+
+def _flash_bwd(cfg: FlashConfig, q, k, v, q_pos, k_pos, out, lse, dout, dlse):
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    group = Hq // Hkv
+    scale = cfg.scale if cfg.scale is not None else 1.0 / (D**0.5)
+    bk = _pick_block(Sk, cfg.block_k)
+    nk = Sk // bk
+
+    qf = q.astype(jnp.float32)
+    doutf = dout.astype(jnp.float32)
+    # delta = rowsum(dout * out): (B,Sq,Hq)
+    delta = jnp.sum(doutf * out.astype(jnp.float32), axis=-1)
+    # The lse output participates in downstream online-softmax merges (that is
+    # the whole point of TokenRing partials), so its cotangent must flow:
+    # d lse / d scores = p  =>  ds gains a "+ dlse" term alongside (dp - delta).
+    row_valid = jnp.logical_not(jnp.isneginf(lse))
+    dlse = jnp.where(row_valid, dlse.astype(jnp.float32), 0.0)
+    # Safe lse for exp(): fully-masked rows have lse=-inf and p ends up 0.
+    lse_safe = jnp.where(row_valid, lse, 0.0)
+
+    kb = jnp.moveaxis(k.reshape(B, nk, bk, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bk, Hkv, D), 1, 0)
+    kpb = jnp.moveaxis(k_pos.reshape(B, nk, bk), 1, 0)  # (nk, B, bk)
+
+    def step(dq_acc, blk):
+        kb_, vb_, kp_ = blk
+        if group > 1:
+            kbx = jnp.repeat(kb_, group, axis=2)
+            vbx = jnp.repeat(vb_, group, axis=2)
+        else:
+            kbx, vbx = kb_, vb_
+        scores = (
+            jnp.einsum("bqhd,bkhd->bhqk", qf, kbx.astype(jnp.float32)) * scale
+        )
+        mask = kp_[:, None, :] < PAD_POS // 2  # (B, 1, bk)
+        mask = jnp.broadcast_to(mask, (B, Sq, kp_.shape[-1]))
+        if cfg.causal:
+            mask = jnp.logical_and(mask, q_pos[:, :, None] >= kp_[:, None, :])
+        if cfg.window is not None:
+            mask = jnp.logical_and(
+                mask, q_pos[:, :, None] - kp_[:, None, :] < cfg.window
+            )
+        # p: true softmax probabilities recovered from lse.
+        p = jnp.exp(scores - lse_safe.transpose(0, 2, 1)[..., None])
+        p = jnp.where(mask[:, None], p, 0.0)
+        p = jnp.where(row_valid.transpose(0, 2, 1)[..., None], p, 0.0)
+
+        dp = jnp.einsum("bqhd,bkhd->bhqk", doutf, vbx.astype(jnp.float32))
+        ds = (
+            p
+            * (
+                dp
+                - delta.transpose(0, 2, 1)[..., None]
+                + dlse.transpose(0, 2, 1)[..., None]
+            )
+            * scale
+        )  # (B,H,Sq,bk)
+
+        dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds, kbx.astype(jnp.float32))
+        dk_full = jnp.einsum("bhqk,bqhd->bkhd", ds, qf)  # (B,bk,Hq,D)
+        dv_full = jnp.einsum("bhqk,bqhd->bkhd", p, doutf)
+        if group > 1:
+            dk_ = dk_full.reshape(B, bk, Hkv, group, D).sum(axis=3)
+            dv_ = dv_full.reshape(B, bk, Hkv, group, D).sum(axis=3)
+        else:
+            dk_, dv_ = dk_full, dv_full
+        return dq_acc, (dk_, dv_)
+
+    dq0 = jnp.zeros((B, Sq, Hq, D), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0, (kb, vb, kpb))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk, Hkv, D)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk, Hkv, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp plumbing
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(cfg: FlashConfig, q, k, v, q_pos, k_pos):
+    impl = cfg.resolve_impl()
+    if impl == "xla":
+        return _xla_flash_fwd(cfg, q, k, v, q_pos, k_pos)
+    interpret = impl == "pallas_interpret"
+    Sq, Sk = q.shape[1], k.shape[1]
+    bq = _pick_block(Sq, cfg.block_q)
+    bk = _pick_block(Sk, cfg.block_k)
+    return flash_attention_fwd_pallas(
+        q,
+        k,
+        v,
+        q_pos,
+        k_pos,
+        causal=cfg.causal,
+        window=cfg.window,
+        scale=cfg.scale,
+        block_q=bq,
+        block_k=bk,
+        interpret=interpret,
+    )
+
+
+def _flash_fwd_rule(cfg, q, k, v, q_pos, k_pos):
+    out, lse = _flash(cfg, q, k, v, q_pos, k_pos)
+    return (out, lse), (q, k, v, q_pos, k_pos, out, lse)
+
+
+def _flash_bwd_rule(cfg, res, cts):
+    q, k, v, q_pos, k_pos, out, lse = res
+    dout, dlse = cts
+    dq, dk, dv = _flash_bwd(cfg, q, k, v, q_pos, k_pos, out, lse, dout, dlse)
+    zero_pos_q = np.zeros(q_pos.shape, dtype=jax.dtypes.float0)
+    zero_pos_k = np.zeros(k_pos.shape, dtype=jax.dtypes.float0)
+    return dq, dk, dv, zero_pos_q, zero_pos_k
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    q_pos=None,
+    k_pos=None,
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    impl: str = "auto",
+):
+    """Public flash attention returning TokenRing partials ``(out, lse)``.
+
+    See module docstring for impl choices.  ``q_pos``/``k_pos`` default to
+    ``arange`` (contiguous layout).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    q_pos = normalize_positions(q_pos, B, Sq)
+    k_pos = normalize_positions(k_pos, B, Sk)
+    cfg = FlashConfig(
+        causal=causal,
+        window=window,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        impl=impl,
+    )
+    return _flash(cfg, q, k, v, q_pos, k_pos)

@@ -1,0 +1,152 @@
+"""Pure-jnp attention oracles.
+
+These are the correctness references for (a) the Pallas flash-attention kernel
+and (b) every sequence-parallel strategy in ``repro.core``.  Everything here is
+deliberately simple: materialize the full score matrix in float32, no blocking.
+
+Layout convention (used across the whole framework):
+    q:   (B, Sq, Hq,  D)
+    k,v: (B, Sk, Hkv, D)     with Hq % Hkv == 0  (GQA; Hq == Hkv is MHA)
+    out: (B, Sq, Hq,  D)     in q.dtype
+    lse: (B, Sq, Hq)         float32
+
+Masking is position-based: ``q_pos``/``k_pos`` give *global* token positions,
+shape ``(B, Sq)`` / ``(B, Sk)`` (1-D inputs are broadcast over batch), so the
+same oracle covers contiguous, zigzag, rotated (ring-step), and per-request
+(continuous batching) layouts.  ``causal=True`` masks ``k_pos > q_pos``.
+A fully-masked query row returns ``out = 0`` and ``lse = -inf``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_reference", "blockwise_reference", "normalize_positions"]
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+PAD_POS = 2**30  # keep in sync with kernels.flash_attention.PAD_POS
+
+
+def normalize_positions(pos, B, S):
+    """Accept (S,) or (B, S) int positions; return (B, S) int32."""
+    if pos is None:
+        pos = jnp.arange(S, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        pos = jnp.broadcast_to(pos[None, :], (B, S))
+    return pos
+
+
+def _expand_gqa(k, Hq):
+    """Repeat KV heads to match Hq query heads."""
+    B, Sk, Hkv, D = k.shape
+    if Hkv == Hq:
+        return k
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+    return jnp.repeat(k, rep, axis=2)
+
+
+@partial(jax.jit, static_argnames=("causal", "return_lse", "window"))
+def attention_reference(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = False,
+    q_pos=None,
+    k_pos=None,
+    scale=None,
+    bias=None,
+    window: int | None = None,
+    return_lse: bool = True,
+):
+    """Naive full-matrix attention in float32.
+
+    ``window``: optional sliding-window size — only keys with
+    ``q_pos - window < k_pos`` are visible (combined with ``causal``).
+    Keys at the PAD_POS sentinel are always masked.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+    q_pos = normalize_positions(q_pos, B, Sq)
+    k_pos = normalize_positions(k_pos, B, Sk)
+
+    k = _expand_gqa(k, Hq)
+    v = _expand_gqa(v, Hq)
+
+    qf = q.astype(jnp.float32) * scale
+    # scores: (B, Hq, Sq, Sk)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, k.astype(jnp.float32))
+    if bias is not None:
+        scores = scores + bias.astype(jnp.float32)
+
+    mask = k_pos[:, None, :] < PAD_POS // 2  # (B, 1, Sk)
+    mask = jnp.broadcast_to(mask, (B, Sq, Sk))
+    if causal:
+        mask = jnp.logical_and(mask, q_pos[:, :, None] >= k_pos[:, None, :])
+    if window is not None:
+        mask = jnp.logical_and(
+            mask, q_pos[:, :, None] - k_pos[:, None, :] < window
+        )
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+
+    row_max = jnp.max(scores, axis=-1, keepdims=True)
+    # Rows that are fully masked: keep the math finite, zero them at the end.
+    safe_max = jnp.where(row_max <= NEG_INF / 2, 0.0, row_max)
+    unnorm = jnp.exp(scores - safe_max)
+    unnorm = jnp.where(mask[:, None], unnorm, 0.0)
+    denom = jnp.sum(unnorm, axis=-1, keepdims=True)
+    any_valid = denom > 0.0
+    out = jnp.einsum("bhqk,bkhd->bqhd", unnorm, v.astype(jnp.float32))
+    out = out / jnp.where(any_valid, denom, 1.0).transpose(0, 2, 1, 3)
+    out = jnp.where(any_valid.transpose(0, 2, 1, 3), out, 0.0)
+
+    if not return_lse:
+        return out.astype(q.dtype)
+    lse = safe_max[..., 0] + jnp.log(jnp.where(any_valid[..., 0], denom[..., 0], 1.0))
+    lse = jnp.where(any_valid[..., 0], lse, -jnp.inf)
+    # (B, Hq, Sq) -> (B, Sq, Hq)
+    return out.astype(q.dtype), lse.transpose(0, 2, 1)
+
+
+def blockwise_reference(
+    q,
+    k,
+    v,
+    *,
+    block_k: int,
+    causal: bool = False,
+    q_pos=None,
+    k_pos=None,
+    scale=None,
+):
+    """Blockwise attention over KV blocks, merged with ``core.merge``.
+
+    This is the single-device analogue of what the ring strategies do across
+    devices — it exists to validate the merge logic independently of any
+    communication schedule.
+    """
+    from repro.core.merge import empty_partial, finalize, merge_partials
+
+    B, Sq, Hq, D = q.shape
+    _, Sk, _, _ = k.shape
+    assert Sk % block_k == 0
+    k_pos = normalize_positions(k_pos, B, Sk)
+
+    out, lse = empty_partial((B, Sq, Hq, D))
+    for start in range(0, Sk, block_k):
+        kb = k[:, start : start + block_k]
+        vb = v[:, start : start + block_k]
+        kpb = k_pos[:, start : start + block_k]
+        o, l = attention_reference(
+            q, kb, vb, causal=causal, q_pos=q_pos, k_pos=kpb, scale=scale
+        )
+        out, lse = merge_partials(out, lse, o, l)
+    out, lse = finalize(out, lse)
+    return out.astype(q.dtype), lse

@@ -1,0 +1,349 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` must succeed on the
+(16,16) single-pod mesh and the (2,16,16) multi-pod mesh for every cell; the
+compiled artifact yields memory_analysis (fits-per-device), cost_analysis,
+and the post-SPMD HLO from which the roofline terms are derived
+(launch/hlo_analysis.py).  Results land as JSON under experiments/artifacts/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+  ... --strategy tokenring|tokenring_faithful|ring|ring_bidir|auto
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import math  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, ASSIGNED  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_pctx, make_production_mesh  # noqa: E402
+from repro.launch.train_step import make_train_step  # noqa: E402
+from repro.models import SHAPES, build_model, input_specs, runnable  # noqa: E402
+from repro.optim.adamw import adamw_init  # noqa: E402
+from repro.sharding.rules import (  # noqa: E402
+    batch_shardings,
+    params_shardings,
+    serve_state_shardings,
+)
+
+# TPU v5e hardware constants for the roofline (see EXPERIMENTS.md §Roofline).
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link direction
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))),
+    "experiments", "artifacts",
+)
+
+_EXPERT_KEYS = ("wg", "wu", "wd")
+
+
+def _param_counts(param_specs, cfg):
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(param_specs)[0]:
+        n = math.prod(leaf.shape)
+        total += n
+        keys = [getattr(k, "key", None) for k in path]
+        if keys and keys[-1] in _EXPERT_KEYS:
+            expert += n
+    active = total
+    if cfg.n_experts:
+        active = total - expert + expert * cfg.n_experts_per_token / cfg.n_experts
+    return total, active
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _attention_waste_model(cfg, shape, world, kind, sp_degree):
+    """Modelled dot-FLOPs the Pallas kernel's tile skip removes vs the
+    XLA-fallback lowering (which computes masked-full attention).
+
+    The dry-run lowers the pure-jnp flash path (Mosaic cannot lower on CPU);
+    on the TPU target the kernel skips fully-masked tiles, so zigzag-causal
+    costs ~half of masked-full and windowed attention costs ~window/context.
+    Returns (full_attn_flops, waste_flops), both global per step.
+    """
+    if kind == "decode" or cfg.family == "ssm":
+        return 0.0, 0.0
+    B, S = shape.global_batch, shape.seq_len
+    Hq, Dh = cfg.n_heads, cfg.head_dim
+    mult = 4.0 if kind == "train" else 1.0  # fwd + remat-fwd + bwd(2x)
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(len(cfg.block_pattern), 1)
+        S_loc = S // sp_degree
+        halo = max(1, -(-(cfg.window - 1) // max(S_loc, 1)))
+        ctx = min(S, S_loc * (1 + halo))
+        computed = 4.0 * B * Hq * S * ctx * Dh * n_attn * mult
+        needed = 4.0 * B * Hq * S * min(cfg.window, S) * Dh * n_attn * mult
+        return computed, max(computed - needed, 0.0)
+    if cfg.family == "encdec":
+        # decoder self-attention is causal; encoder + cross are not.
+        computed = 4.0 * B * Hq * S * S * Dh * cfg.n_layers * mult
+        return computed, computed / 2.0
+    n_attn = cfg.n_layers
+    S_tot = S  # vlm: positions cover image prefix + text, S is the full length
+    computed = 4.0 * B * Hq * S_tot * S_tot * Dh * n_attn * mult
+    waste = computed / 2.0 if cfg.causal else 0.0
+    return computed, waste
+
+
+def run_cell(arch, shape_name, *, multi_pod, strategy, out_dir, force=False,
+             travel_dtype="float32"):
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, why = runnable(cfg, shape)
+    mesh_tag = "multipod" if multi_pod else "pod"
+    tag = f"{arch}__{shape_name}__{mesh_tag}__{strategy}"
+    if travel_dtype != "float32":
+        tag += "__tw" + travel_dtype
+    out_path = os.path.join(out_dir, tag + ".json")
+    if not force and os.path.exists(out_path):
+        print(f"[skip-cached] {tag}")
+        return json.load(open(out_path))
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "strategy": strategy, "status": "skipped", "reason": why}
+        os.makedirs(out_dir, exist_ok=True)
+        json.dump(rec, open(out_path, "w"), indent=1)
+        print(f"[skip] {tag}: {why}")
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    world = math.prod(mesh.shape.values())
+    if shape.kind != "train":
+        cfg = cfg.with_(param_dtype="bfloat16", remat="none")
+    pctx = make_pctx(
+        mesh, strategy=strategy, layout=cfg.layout, impl="xla",
+        global_batch=shape.global_batch,
+    )
+    if travel_dtype != "float32":
+        import dataclasses
+
+        pctx = dataclasses.replace(pctx, travel_dtype=travel_dtype)
+    bundle = build_model(cfg, pctx)
+    kind, batch_specs = input_specs(cfg, shape)
+    ideal_decode_bytes = 0
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_specs = jax.eval_shape(bundle.init, key_spec)
+    p_sh = params_shardings(params_specs, mesh)
+    total_params, active_params = _param_counts(params_specs, cfg)
+
+    if kind == "train":
+        opt_specs = jax.eval_shape(adamw_init, params_specs)
+        o_sh = {
+            "step": NamedSharding(mesh, P()),
+            "m": params_shardings(opt_specs["m"], mesh),
+            "v": params_shardings(opt_specs["v"], mesh),
+        }
+        b_sh = batch_shardings(batch_specs, mesh, pctx)
+        step = make_train_step(bundle)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_specs, opt_specs, batch_specs)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * active_params * tokens
+    elif kind == "prefill":
+        b_sh = batch_shardings(batch_specs, mesh, pctx)
+        if bundle.prefill is not None and cfg.family in ("dense", "moe", "vlm"):
+            from repro.models.transformer import init_decode_cache
+
+            cache_specs = jax.eval_shape(
+                lambda: init_decode_cache(cfg, shape.global_batch, shape.seq_len, pctx)
+            )
+            c_sh = serve_state_shardings(cache_specs, mesh, pctx, cfg)
+            args = [params_specs, batch_specs["tokens"], batch_specs["positions"], cache_specs]
+            in_sh = [p_sh, b_sh["tokens"], b_sh["positions"], c_sh]
+            if cfg.family == "vlm":
+                args.append(batch_specs["patch_embeds"])
+                in_sh.append(b_sh["patch_embeds"])
+            jitted = jax.jit(
+                bundle.prefill, in_shardings=tuple(in_sh), donate_argnums=(3,)
+            )
+            lowered = jitted.lower(*args)
+        else:
+            # forward pass (logits+loss, no grad) as the prefill proxy
+            jitted = jax.jit(bundle.loss, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params_specs, batch_specs)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * active_params * tokens
+    else:  # decode
+        # Serving layout: Megatron TP weights (resident, model-sharded) —
+        # per-layer ZeRO gathers would dwarf the single-token compute.
+        p_sh = params_shardings(params_specs, mesh, mode="serve")
+        state_specs = bundle.serve_state_specs(shape)
+        s_sh = serve_state_shardings(state_specs, mesh, pctx, cfg)
+        tok_specs = batch_specs["token_ids"]
+        t_sh = NamedSharding(mesh, P(pctx.data_axis))
+        jitted = jax.jit(
+            bundle.decode_step, in_shardings=(p_sh, t_sh, s_sh),
+            donate_argnums=(2,),
+        )
+        lowered = jitted.lower(params_specs, tok_specs, state_specs)
+        model_flops = 2.0 * active_params * shape.global_batch
+        ideal_decode_bytes = sum(
+            math.prod(x.shape) * x.dtype.itemsize
+            for x in jax.tree.leaves(params_specs)
+        ) + sum(
+            math.prod(x.shape) * x.dtype.itemsize
+            for x in jax.tree.leaves(state_specs)
+        )
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    try:
+        cost = dict(compiled.cost_analysis())
+    except Exception:
+        cost = {}
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo, world=world)
+
+    per_dev = stats.as_dict()
+    attn_full, attn_waste = _attention_waste_model(
+        cfg, shape, world, kind, pctx.sp_degree
+    )
+    waste_per_dev = attn_waste / world
+    compute_term = per_dev["dot_flops"] / PEAK_FLOPS
+    # TPU-target compute: the Pallas kernel skips fully-masked tiles that the
+    # XLA-fallback lowering computes+masks (see _attention_waste_model).
+    compute_pallas = max(per_dev["dot_flops"] - waste_per_dev, 0.0) / PEAK_FLOPS
+    memory_term = per_dev["dot_bytes_fused"] / HBM_BW
+    memory_upper = per_dev["dot_bytes"] / HBM_BW
+    collective_term = max(per_dev["link_bytes_fwd"], per_dev["link_bytes_bwd"]) / LINK_BW
+    terms = {
+        "compute_s": compute_pallas,
+        "memory_s": memory_term,
+        "collective_s": collective_term,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_flops_per_dev = model_flops / world
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_tag,
+        "mesh_shape": dict(mesh.shape),
+        "strategy": strategy,
+        "layout": cfg.layout,
+        "kind": kind,
+        "status": "ok",
+        "world": world,
+        "params_total": total_params,
+        "params_active": active_params,
+        "model_flops_total": model_flops,
+        "model_flops_per_device": model_flops_per_dev,
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "xla_cost_analysis": {k: v for k, v in cost.items() if isinstance(v, (int, float))},
+        "hlo_stats_per_device": per_dev,
+        "attention_model": {
+            "full_flops_global": attn_full,
+            "pallas_skip_waste_global": attn_waste,
+        },
+        "roofline": {
+            **terms,
+            "compute_as_compiled_s": compute_term,
+            "memory_upper_s": memory_upper,
+            "dominant": dominant,
+            "bound_s": bound,
+            "useful_flops_ratio": (
+                model_flops_per_dev / max(per_dev["dot_flops"] - waste_per_dev, 1.0)
+            ),
+            # Compute-referenced fraction (the train/prefill score).  Decode
+            # is inherently bandwidth-bound: its score is the bandwidth
+            # fraction — ideal bytes (params+state read once) / modelled time.
+            "roofline_fraction": (
+                ((ideal_decode_bytes / world / HBM_BW) / bound)
+                if kind == "decode" and bound
+                else ((model_flops_per_dev / PEAK_FLOPS) / bound if bound else 0.0)
+            ),
+            "decode_ideal_memory_s": (
+                ideal_decode_bytes / world / HBM_BW if kind == "decode" else None
+            ),
+        },
+        "timing": {"lower_s": t_lower, "compile_s": t_compile},
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    json.dump(rec, open(out_path, "w"), indent=1)
+    print(
+        f"[ok] {tag}: compile {t_compile:.1f}s "
+        f"peak/dev {rec['memory']['peak_bytes_per_device']/2**30:.2f} GiB "
+        f"dominant {dominant} bound {bound*1e3:.2f} ms "
+        f"roofline {rec['roofline']['roofline_fraction']*100:.1f}%"
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--strategy", default="tokenring")
+    ap.add_argument("--travel-dtype", default="float32")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                cells.append((arch, shape, mp))
+
+    failures = []
+    for arch, shape, mp in cells:
+        try:
+            run_cell(
+                arch, shape, multi_pod=mp, strategy=args.strategy,
+                out_dir=args.out, force=args.force,
+                travel_dtype=args.travel_dtype,
+            )
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape, mp, repr(e)))
+            print(f"[FAIL] {arch} {shape} mp={mp}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nDRY-RUN: all requested cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Production mesh construction (the dry-run target).
+
+Single pod: (data=16, model=16) = 256 chips.  Multi-pod: (pod=2, data=16,
+model=16) = 512 chips.  ``model`` is the sequence-parallel ring (TokenRing's
+axis), ``pod`` the inter-pod KV ring of the paper's Case Study III, ``data``
+is DP/FSDP.
+
+Defined as functions so importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+from repro.core.api import ParallelContext
+
+__all__ = ["make_production_mesh", "make_pctx", "SINGLE_POD_SHAPE", "MULTI_POD_SHAPE"]
+
+SINGLE_POD_SHAPE = (16, 16)
+MULTI_POD_SHAPE = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_pctx(
+    mesh,
+    *,
+    strategy: str = "tokenring",
+    layout: str = "zigzag",
+    impl: str = "auto",
+    global_batch: int | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    inner_strategy: str | None = None,
+) -> ParallelContext:
+    """ParallelContext for a mesh; drops the data axis if the batch cannot
+    shard over it (e.g. long_500k's global_batch=1)."""
+    multi = "pod" in mesh.axis_names
+    sp_axes = ("pod", "model") if multi else ("model",)
+    data_axis = "data"
+    if global_batch is not None and global_batch % mesh.shape["data"] != 0:
+        data_axis = None
+    return ParallelContext(
+        mesh=mesh,
+        data_axis=data_axis,
+        sp_axes=sp_axes,
+        strategy=strategy,
+        layout=layout,
+        impl=impl,
+        block_q=block_q,
+        block_k=block_k,
+        inner_strategy=inner_strategy,
+    )

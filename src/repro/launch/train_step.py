@@ -1,0 +1,37 @@
+"""Reusable jitted train-step builder (used by the trainer and the dry-run)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["make_train_step", "make_opt_init"]
+
+
+def make_opt_init():
+    return adamw_init
+
+
+def make_train_step(bundle, *, lr=3e-4, opt_cfg: AdamWConfig = AdamWConfig()):
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt, metrics)``.
+
+    Gradients of the bundle loss + AdamW update.  The DP gradient reduction
+    is implicit: XLA inserts reduce-scatter/all-gather for the ZeRO-sharded
+    parameters from the sharding specs alone.
+    """
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(bundle.loss, has_aux=True)(
+            params, batch
+        )
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, lr=lr, cfg=opt_cfg
+        )
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return new_params, new_opt, out
+
+    return train_step

@@ -1,0 +1,14 @@
+"""Composable model definitions for the 10 assigned architectures."""
+
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+from repro.models.registry import ModelBundle, build_model, input_specs, runnable
+
+__all__ = [
+    "ArchConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ModelBundle",
+    "build_model",
+    "input_specs",
+    "runnable",
+]

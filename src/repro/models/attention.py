@@ -1,0 +1,163 @@
+"""Model-level attention layer: projections + RoPE + SP attention core.
+
+Three entry points sharing one parameter set:
+  * ``attention``        — training / prefill self-attention (optionally
+                           filling a KV cache),
+  * ``attention_decode`` — single-token decode against a sharded cache,
+  * ``cross_attention``  — encoder-decoder cross attention (resident KV =
+                           TokenRing's natural fit).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import ParallelContext, sp_attention, sp_decode
+from repro.models.layers import apply_norm, apply_rope, dense, dense_init, norm_init
+
+__all__ = [
+    "attention_init",
+    "attention",
+    "attention_decode",
+    "cross_attention",
+]
+
+
+def attention_init(key, cfg):
+    d, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, Hq * Dh, bias=cfg.qkv_bias, dtype=cfg.param_dtype),
+        "wk": dense_init(ks[1], d, Hkv * Dh, bias=cfg.qkv_bias, dtype=cfg.param_dtype),
+        "wv": dense_init(ks[2], d, Hkv * Dh, bias=cfg.qkv_bias, dtype=cfg.param_dtype),
+        "wo": dense_init(ks[3], Hq * Dh, d, dtype=cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(Dh, norm_type="rmsnorm", dtype=cfg.param_dtype)
+        p["k_norm"] = norm_init(Dh, norm_type="rmsnorm", dtype=cfg.param_dtype)
+    return p
+
+
+def _project_qkv(p, x, positions, cfg, rope: bool = True, pctx=None):
+    from repro.sharding import constrain_act
+
+    B, S, _ = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    q = constrain_act(dense(p["wq"], x, dt), pctx).reshape(B, S, Hq, Dh)
+    k = constrain_act(dense(p["wk"], x, dt), pctx).reshape(B, S, Hkv, Dh)
+    v = constrain_act(dense(p["wv"], x, dt), pctx).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, norm_type="rmsnorm", eps=cfg.norm_eps)
+        k = apply_norm(p["k_norm"], k, norm_type="rmsnorm", eps=cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(
+    p,
+    x,
+    positions,
+    *,
+    cfg,
+    pctx: ParallelContext,
+    window: int | None = None,
+    causal: bool | None = None,
+    rope: bool = True,
+    cache=None,
+):
+    """Self-attention over ``x (B,S,d)`` with global ``positions (B,S)``.
+
+    If ``cache`` (dict with k/v/pos) is given, returns ``(y, new_cache)`` —
+    the prefill path: computed K/V overwrite the first ``S`` cache slots.
+    """
+    B, S, d = x.shape
+    causal = cfg.causal if causal is None else causal
+    q, k, v = _project_qkv(p, x, positions, cfg, rope=rope, pctx=pctx)
+    out = sp_attention(
+        q, k, v, positions, positions, pctx=pctx, causal=causal, window=window
+    )
+    y = dense(p["wo"], out.reshape(B, S, -1), jnp.dtype(cfg.dtype))
+    if cache is None:
+        return y
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        "pos": jax.lax.dynamic_update_slice(cache["pos"], positions, (0, 0)),
+    }
+    return y, new_cache
+
+
+def attention_decode(
+    p,
+    x,
+    positions,
+    k_cache,
+    v_cache,
+    pos_cache,
+    write_index,
+    *,
+    cfg,
+    pctx: ParallelContext,
+    window: int | None = None,
+    rope: bool = True,
+):
+    """Decode step: ``x (B,1,d)``; cache k/v ``(B,Smax,Hkv,D)`` seq-sharded.
+
+    ``positions (B,1)``: the global position of the new token per request.
+    ``pos_cache (B,Smax)``: position table (already updated for this step —
+    it is shared across layers).  ``write_index (B,)``: cache slot to write;
+    per-request slots enable continuous batching.
+    Returns ``(y, k_cache', v_cache')``.
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, positions, cfg, rope=rope, pctx=pctx)
+    bidx = jnp.arange(B)
+    kc = k_cache.at[bidx, write_index].set(k[:, 0].astype(k_cache.dtype))
+    vc = v_cache.at[bidx, write_index].set(v[:, 0].astype(v_cache.dtype))
+    out = sp_decode(q, kc, vc, pos_cache, positions, pctx=pctx, window=window)
+    y = dense(p["wo"], out.reshape(B, S, -1), jnp.dtype(cfg.dtype))
+    return y, kc, vc
+
+
+def cross_attention(
+    p,
+    x,
+    enc_k,
+    enc_v,
+    enc_pos,
+    positions,
+    *,
+    cfg,
+    pctx: ParallelContext,
+):
+    """Cross-attention: queries from the decoder stream, resident encoder KV.
+
+    ``enc_k/enc_v (B,S_enc,Hkv,D)`` are precomputed (by ``encode_kv``) and
+    stay sequence-sharded — the decode-side uses sp_decode (tiny q), the
+    prefill side uses sp_attention non-causally.
+    """
+    B, S, d = x.shape
+    dt = jnp.dtype(cfg.dtype)
+    Hq, Dh = cfg.n_heads, cfg.head_dim
+    q = dense(p["wq"], x, dt).reshape(B, S, Hq, Dh)
+    if S == 1:
+        out = sp_decode(q, enc_k, enc_v, enc_pos, positions, pctx=pctx)
+    else:
+        out = sp_attention(
+            q, enc_k, enc_v, positions, enc_pos, pctx=pctx, causal=False
+        )
+    return dense(p["wo"], out.reshape(B, S, -1), dt)
+
+
+def encode_kv(p, enc_x, cfg):
+    """Precompute cross-attention K/V from encoder outputs (no RoPE)."""
+    B, S, _ = enc_x.shape
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    k = dense(p["wk"], enc_x, dt).reshape(B, S, Hkv, Dh)
+    v = dense(p["wv"], enc_x, dt).reshape(B, S, Hkv, Dh)
+    return k, v

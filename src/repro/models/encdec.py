@@ -1,0 +1,236 @@
+"""Encoder-decoder transformer backbone (whisper-base).
+
+The audio frontend (mel conv stack) is a STUB per the assignment:
+``input_specs()`` provides precomputed frame embeddings (B, S_enc, d) and the
+model adds sinusoidal positions.  The decoder uses learned positions, causal
+self-attention, and per-layer cross-attention against the (sequence-sharded,
+resident) encoder states — cross-attention is TokenRing's natural fit: the
+encoder KV never moves, decoder queries circulate.
+
+Non-causal encoder SP attention uses the contiguous layout (no causal
+imbalance to fix).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import ParallelContext
+from repro.models.attention import (
+    attention,
+    attention_decode,
+    attention_init,
+    cross_attention,
+    encode_kv,
+)
+from repro.models.layers import (
+    apply_norm,
+    lm_cross_entropy,
+    dense,
+    dense_init,
+    embed_init,
+    mlp,
+    mlp_init,
+    norm_init,
+)
+
+__all__ = [
+    "init_encdec",
+    "encdec_loss",
+    "encdec_encode",
+    "encdec_decode_step",
+    "init_encdec_state",
+    "sinusoid_positions",
+]
+
+
+def sinusoid_positions(S: int, d: int):
+    pos = np.arange(S)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * dim / d)
+    emb = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+def _enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+        "attn": attention_init(k1, cfg),
+        "ln2": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, mlp_type=cfg.mlp_type, dtype=cfg.param_dtype),
+    }
+
+
+def _dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+        "self": attention_init(k1, cfg),
+        "ln_x": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+        "cross": attention_init(k2, cfg),
+        "ln2": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, mlp_type=cfg.mlp_type, dtype=cfg.param_dtype),
+    }
+
+
+def init_encdec(cfg, key, max_dec_len: int = 32768):
+    k_emb, k_pos, k_enc, k_dec = jax.random.split(key, 4)
+    return {
+        "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype=cfg.param_dtype),
+        "dec_pos": jax.random.normal(
+            k_pos, (max_dec_len, cfg.d_model), jnp.dtype(cfg.param_dtype)
+        )
+        * 0.01,
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(
+            jax.random.split(k_enc, cfg.n_enc_layers)
+        ),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(
+            jax.random.split(k_dec, cfg.n_layers)
+        ),
+        "enc_norm": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+        "dec_norm": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+    }
+    # whisper ties the decoder embedding to the output head (tie_embeddings)
+
+
+def _encoder(params, frames, enc_pos, *, cfg, pctx):
+    """frames (B,S_enc,d) from the frontend stub -> encoder states."""
+    dt = jnp.dtype(cfg.dtype)
+    S = frames.shape[1]
+    x = frames.astype(dt) + sinusoid_positions(S, cfg.d_model).astype(dt)[None]
+
+    def body(x, p_l):
+        h = apply_norm(p_l["ln1"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        x = x + attention(
+            p_l["attn"], h, enc_pos, cfg=cfg, pctx=pctx, causal=False, rope=False
+        )
+        h = apply_norm(p_l["ln2"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        x = x + mlp(p_l["mlp"], h, mlp_type=cfg.mlp_type, compute_dtype=dt)
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(params["enc_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+
+
+def _decoder(params, tokens, positions, enc_x, enc_pos, *, cfg, pctx):
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"]["table"][tokens].astype(dt)
+    x = x + params["dec_pos"][positions].astype(dt)  # (B,S,d) fancy-indexed
+
+    def body(x, p_l):
+        h = apply_norm(p_l["ln1"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        x = x + attention(
+            p_l["self"], h, positions, cfg=cfg, pctx=pctx, causal=True, rope=False
+        )
+        h = apply_norm(p_l["ln_x"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        ek, ev = encode_kv(p_l["cross"], enc_x, cfg)
+        x = x + cross_attention(
+            p_l["cross"], h, ek, ev, enc_pos, positions, cfg=cfg, pctx=pctx
+        )
+        h = apply_norm(p_l["ln2"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        x = x + mlp(p_l["mlp"], h, mlp_type=cfg.mlp_type, compute_dtype=dt)
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return apply_norm(params["dec_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+
+
+def encdec_loss(params, batch, *, cfg, pctx):
+    """batch: frames (B,S_enc,d), tokens/labels/positions (B,S_dec)."""
+    B, S_enc = batch["frames"].shape[:2]
+    enc_pos = batch.get("enc_positions")
+    if enc_pos is None:
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(S_enc, dtype=jnp.int32)[None], (B, S_enc)
+        )
+    enc_x = _encoder(params, batch["frames"], enc_pos, cfg=cfg, pctx=pctx)
+    x = _decoder(
+        params, batch["tokens"], batch["positions"], enc_x, enc_pos,
+        cfg=cfg, pctx=pctx,
+    )
+    w = params["embed"]["table"].T  # tied head (whisper convention)
+    loss, denom = lm_cross_entropy(
+        x, w.astype(jnp.dtype(cfg.dtype)), batch["labels"],
+        mask=batch.get("mask"), chunk=cfg.logits_chunk,
+        compute_dtype=jnp.dtype(cfg.dtype), pctx=pctx,
+    )
+    return loss, {"ce_loss": loss, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_encdec_state(cfg, batch: int, max_len: int, enc_seq: int):
+    from repro.kernels.flash_attention import PAD_POS
+
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((L, batch, max_len, Hkv, Dh), dt),
+        "v": jnp.zeros((L, batch, max_len, Hkv, Dh), dt),
+        "pos": jnp.full((batch, max_len), PAD_POS, jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+        # precomputed cross-attention KV (filled by encdec_encode)
+        "xk": jnp.zeros((L, batch, enc_seq, Hkv, Dh), dt),
+        "xv": jnp.zeros((L, batch, enc_seq, Hkv, Dh), dt),
+        "enc_pos": jnp.zeros((batch, enc_seq), jnp.int32),
+    }
+
+
+def encdec_encode(params, frames, state, *, cfg, pctx):
+    """Run the encoder once; fill cross KV into the serve state."""
+    B, S_enc = frames.shape[:2]
+    enc_pos = jnp.broadcast_to(jnp.arange(S_enc, dtype=jnp.int32)[None], (B, S_enc))
+    enc_x = _encoder(params, frames, enc_pos, cfg=cfg, pctx=pctx)
+
+    def per_layer(p_l):
+        return encode_kv(p_l["cross"], enc_x, cfg)
+
+    xk, xv = jax.vmap(per_layer)(params["dec_layers"])
+    return dict(state, xk=xk, xv=xv, enc_pos=enc_pos)
+
+
+def encdec_decode_step(params, token_ids, state, *, cfg, pctx):
+    B = token_ids.shape[0]
+    dt = jnp.dtype(cfg.dtype)
+    write_index = state["len"]
+    positions = write_index[:, None].astype(jnp.int32)
+    x = params["embed"]["table"][token_ids[:, None]].astype(dt)
+    x = x + params["dec_pos"][positions[:, 0]][:, None].astype(dt)
+    pos_cache = state["pos"].at[jnp.arange(B), write_index].set(positions[:, 0])
+
+    def body(x, xs):
+        p_l, kc, vc, xk, xv = xs
+        h = apply_norm(p_l["ln1"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        y, kc, vc = attention_decode(
+            p_l["self"], h, positions, kc, vc, pos_cache, write_index,
+            cfg=cfg, pctx=pctx, rope=False,
+        )
+        x = x + y
+        h = apply_norm(p_l["ln_x"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        x = x + cross_attention(
+            p_l["cross"], h, xk, xv, state["enc_pos"], positions, cfg=cfg, pctx=pctx
+        )
+        h = apply_norm(p_l["ln2"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        x = x + mlp(p_l["mlp"], h, mlp_type=cfg.mlp_type, compute_dtype=dt)
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], state["k"], state["v"],
+                  state["xk"], state["xv"])
+    )
+    x = apply_norm(params["dec_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(dt), params["embed"]["table"].T.astype(dt)
+    )[:, 0]
+    new_state = dict(state, k=ks, v=vs, pos=pos_cache, len=state["len"] + 1)
+    return logits, new_state

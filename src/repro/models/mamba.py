@@ -1,0 +1,347 @@
+"""Mamba-1 (selective SSM) blocks — falcon-mamba-7b.
+
+TokenRing does not apply (no attention); the sequence-parallel substrate is
+the distributed prefix scan (``core.recurrence``).  The selective scan is the
+memory hot spot: materializing the (B, S, d_inner, d_state) transition tensor
+is ~16x the activation size.  We therefore run a **two-pass chunked scan**
+inside shard_map:
+
+  pass 1 (summary): sequentially scan chunks carrying only the state
+      ``h (B, d_inner, N)``; the per-device decay product needs no scan at all
+      (``prod_t exp(dt_t A) = exp(A * sum_t dt_t)``);
+  cross-device: ``device_exclusive_scan`` (log2 P ppermute doubling rounds);
+  pass 2 (emit): rescan chunks with the correct incoming state, emitting
+      ``y = C.h + D x`` per chunk — (B, chunk, d_inner, N) is the only
+      transient, controlled by ``cfg.scan_chunk``.
+
+Decode is O(1): state update + windowless output, no cache growth — which is
+why falcon-mamba runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.api import ParallelContext
+from repro.core.recurrence import device_exclusive_scan
+from repro.models.layers import apply_norm, dense, dense_init, norm_init
+
+__all__ = [
+    "mamba_layer_init",
+    "mamba_layer",
+    "mamba_layer_decode",
+    "init_mamba_state",
+    "init_mamba_lm",
+    "mamba_loss",
+    "mamba_decode_step",
+]
+
+
+def mamba_layer_init(key, cfg):
+    d, di, N, R, K = (
+        cfg.d_model,
+        cfg.d_inner,
+        cfg.ssm_state,
+        cfg.dt_rank_resolved,
+        cfg.ssm_conv,
+    )
+    ks = jax.random.split(key, 6)
+    pd = jnp.dtype(cfg.param_dtype)
+    # S4D-real initialization for A; dt bias init for softplus ~ [1e-3, 0.1].
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "norm": norm_init(d, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype=cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (K, di), pd) / jnp.sqrt(K)),
+        "conv_b": jnp.zeros((di,), pd),
+        "x_proj": dense_init(ks[2], di, R + 2 * N, dtype=cfg.param_dtype),
+        "dt_proj": dense_init(ks[3], R, di, bias=True, dtype=cfg.param_dtype),
+        "A_log": jnp.log(A).astype(pd),
+        "D": jnp.ones((di,), pd),
+        "out_proj": dense_init(ks[4], di, d, dtype=cfg.param_dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along seq: x (B,S,di), w (K,di)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, k : k + x.shape[1], :] * w[k] for k in range(K))
+    return y + b
+
+
+def _ssm_inputs(p, h, cfg, pctx=None):
+    """Shared projections: returns (x_c, z, dt_in, Bs, Cs).
+
+    ``dt_in`` stays at rank R (256) — the (B,S,d_inner) fp32 ``dt`` expansion
+    happens *inside* the SP scan's shard_map, so only R-sized activations
+    cross the boundary (32x less traffic than shipping dt; §Perf iter 1).
+    """
+    from repro.sharding import constrain_act
+
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_resolved
+    dt_ = jnp.dtype(cfg.dtype)
+    xz = constrain_act(dense(p["in_proj"], h, dt_), pctx)
+    xi, z = xz[..., :di], xz[..., di:]
+    x_c = jax.nn.silu(
+        _causal_conv(xi, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    )
+    x_c = constrain_act(x_c, pctx)
+    xdb = constrain_act(dense(p["x_proj"], x_c, dt_), pctx)
+    dt_in, Bs, Cs = xdb[..., :R], xdb[..., R : R + N], xdb[..., R + N :]
+    return x_c, z, dt_in, Bs.astype(jnp.float32), Cs.astype(jnp.float32)
+
+
+def _expand_dt(dt_in, dt_w, dt_b):
+    """dt (B,S,di) fp32 from rank-R dt_in — runs inside the scan shard_map."""
+    return jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in.astype(jnp.float32), dt_w.astype(jnp.float32))
+        + dt_b.astype(jnp.float32)
+    )
+
+
+def _chunk_scan(h0, a, b):
+    """Inclusive scan of one chunk given incoming state h0; returns (h_seq, h_last)."""
+    # h_t = a_t h_{t-1} + b_t ; associative scan then h0 correction.
+    def comb(l, r):
+        return l[0] * r[0], r[0] * l[1] + r[1]
+
+    A_cum, h = lax.associative_scan(comb, (a, b), axis=1)
+    h = h + A_cum * h0[:, None]
+    return h, h[:, -1]
+
+
+def _selective_scan_local(x_c, dt, Bs, Cs, A, D, h_in, chunk):
+    """Two-pass chunked scan on local data. Shapes:
+    x_c (B,S,di), dt (B,S,di), Bs/Cs (B,S,N), A (di,N), h_in (B,di,N).
+    Returns y (B,S,di), h_last (B,di,N)."""
+    B, S, di = x_c.shape
+    N = Bs.shape[-1]
+    chunk = max(1, min(chunk, S))
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+
+    def reshape_c(t):
+        return jnp.moveaxis(t.reshape(B, nc, chunk, *t.shape[2:]), 1, 0)
+
+    xc_, dt_, Bs_, Cs_ = map(reshape_c, (x_c, dt, Bs, Cs))
+
+    def emit_chunk(h0, blk):
+        xcb, dtb, Bb, Cb = blk  # (B,chunk,di) / (B,chunk,N)
+        a = jnp.exp(dtb[..., None] * (-jnp.exp(A))[None, None])  # (B,c,di,N)
+        b = (dtb * xcb.astype(jnp.float32))[..., None] * Bb[:, :, None, :]
+        h, h_last = _chunk_scan(h0, a, b)
+        y = jnp.einsum("bcdn,bcn->bcd", h, Cb) + D[None, None] * xcb.astype(
+            jnp.float32
+        )
+        return h_last, y
+
+    emit_chunk = jax.checkpoint(emit_chunk)
+
+    h_last, ys = lax.scan(emit_chunk, h_in, (xc_, dt_, Bs_, Cs_))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    return y, h_last
+
+
+def _summary_pass(x_c, dt, Bs, A, chunk):
+    """Pass 1: local final state under zero init + decay product (no scan for
+    the product: prod_t exp(dt_t A) = exp(A * sum_t dt_t))."""
+    B, S, di = x_c.shape
+    N = Bs.shape[-1]
+    Aneg = -jnp.exp(A)
+    A_prod = jnp.exp(jnp.einsum("bsd,dn->bdn", dt, Aneg))  # (B,di,N)
+
+    chunk = max(1, min(chunk, S))
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+
+    def reshape_c(t):
+        return jnp.moveaxis(t.reshape(B, nc, chunk, *t.shape[2:]), 1, 0)
+
+    xc_, dt_, Bs_ = map(reshape_c, (x_c, dt, Bs))
+
+    def summ_chunk(h0, blk):
+        xcb, dtb, Bb = blk
+        a = jnp.exp(dtb[..., None] * Aneg[None, None])
+        b = (dtb * xcb.astype(jnp.float32))[..., None] * Bb[:, :, None, :]
+        _, h_last = _chunk_scan(h0, a, b)
+        return h_last, None
+
+    summ_chunk = jax.checkpoint(summ_chunk)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    h_last, _ = lax.scan(summ_chunk, h0, (xc_, dt_, Bs_))
+    return A_prod, h_last
+
+
+def selective_scan_sp(x_c, dt_in, Bs, Cs, dt_w, dt_b, A, D, *, pctx: ParallelContext, chunk):
+    """Sequence-parallel selective scan on global arrays (contig layout).
+
+    ``dt_in (B,S,R)`` is expanded to ``dt (B,S,di)`` locally inside the
+    shard_map so only rank-R activations cross the boundary.
+    """
+    if not pctx.active:
+        dt = _expand_dt(dt_in, dt_w, dt_b)
+        B, _, di = x_c.shape
+        h_in = jnp.zeros((B, di, Bs.shape[-1]), jnp.float32)
+        y, _ = _selective_scan_local(x_c, dt, Bs, Cs, A, D, h_in, chunk)
+        return y
+
+    dp = pctx.data_axis
+    seq = pctx.seq_spec()
+    axes = pctx.sp_axes if len(pctx.sp_axes) > 1 else pctx.sp_axes[0]
+    act = P(dp, seq, None)
+
+    def local(x_c, dt_in, Bs, Cs, dt_w, dt_b, A, D):
+        dt = _expand_dt(dt_in, dt_w, dt_b)
+        A_prod, h_last = _summary_pass(x_c, dt, Bs, A, chunk)
+        _, h_in = device_exclusive_scan((A_prod, h_last), axes)
+        y, _ = _selective_scan_local(x_c, dt, Bs, Cs, A, D, h_in, chunk)
+        return y
+
+    fn = jax.shard_map(
+        local,
+        mesh=pctx.mesh,
+        in_specs=(act, act, act, act, P(None, None), P(None), P(None, None), P(None)),
+        out_specs=act,
+        check_vma=False,
+    )
+    return fn(x_c, dt_in, Bs, Cs, dt_w, dt_b, A, D)
+
+
+def mamba_layer(p, x, *, cfg, pctx: ParallelContext):
+    """Full mamba block (pre-norm residual): x (B,S,d) -> (B,S,d)."""
+    from repro.sharding import constrain_act
+
+    dt_ = jnp.dtype(cfg.dtype)
+    h = apply_norm(p["norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    x_c, z, dt_in, Bs, Cs = _ssm_inputs(p, h, cfg, pctx)
+    A = p["A_log"].astype(jnp.float32)
+    D = p["D"].astype(jnp.float32)
+    y = selective_scan_sp(
+        x_c, dt_in, Bs, Cs, p["dt_proj"]["w"], p["dt_proj"]["b"], A, D,
+        pctx=pctx, chunk=cfg.scan_chunk,
+    )
+    y = (y.astype(dt_) * jax.nn.silu(z)).astype(dt_)
+    return constrain_act(x + dense(p["out_proj"], y, dt_), pctx)
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) state)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_state(cfg, batch: int):
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    L = cfg.n_layers
+    return {
+        "ssm": jnp.zeros((L, batch, di, N), jnp.float32),
+        "conv": jnp.zeros((L, batch, K - 1, di), jnp.dtype(cfg.dtype)),
+    }
+
+
+def mamba_layer_decode(p, x, ssm_state, conv_state, *, cfg):
+    """One-token step: x (B,1,d); returns (y, ssm_state', conv_state')."""
+    di, N, R, K = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_resolved, cfg.ssm_conv
+    dt_ = jnp.dtype(cfg.dtype)
+    h = apply_norm(p["norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    xz = dense(p["in_proj"], h, dt_)
+    xi, z = xz[..., :di], xz[..., di:]  # (B,1,di)
+    # conv over (state ++ new token)
+    window = jnp.concatenate([conv_state, xi], axis=1)  # (B,K,di)
+    w = p["conv_w"].astype(dt_)
+    x_c = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", window, w) + p["conv_b"].astype(dt_)
+    )[:, None]
+    new_conv = window[:, 1:]
+    xdb = dense(p["x_proj"], x_c, dt_)
+    dt_in, Bs, Cs = xdb[..., :R], xdb[..., R : R + N], xdb[..., R + N :]
+    dtv = jax.nn.softplus(dense(p["dt_proj"], dt_in, jnp.float32))[:, 0]  # (B,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dtv[..., None] * A[None])  # (B,di,N)
+    b = (dtv * x_c[:, 0].astype(jnp.float32))[..., None] * Bs[:, 0, None, :].astype(
+        jnp.float32
+    )
+    h_new = a * ssm_state + b
+    y = jnp.einsum("bdn,bn->bd", h_new, Cs[:, 0].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * x_c[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(dt_) * jax.nn.silu(z)).astype(dt_)
+    out = x + dense(p["out_proj"], y, dt_)
+    return out, h_new, new_conv
+
+
+# ---------------------------------------------------------------------------
+# full LM wrappers (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_lm(cfg, key):
+    from repro.models.layers import embed_init, norm_init as _ni
+
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype=cfg.param_dtype),
+        "layers": jax.vmap(lambda k: mamba_layer_init(k, cfg))(
+            jax.random.split(k_layers, cfg.n_layers)
+        ),
+        "final_norm": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            k_head, cfg.d_model, cfg.vocab_size, dtype=cfg.param_dtype
+        )
+    return params
+
+
+def _head_w(params, cfg):
+    return params["embed"]["table"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+
+
+def mamba_apply(params, tokens, *, cfg, pctx):
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+
+    def body(x, p_l):
+        return mamba_layer(p_l, x, cfg=cfg, pctx=pctx), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return apply_norm(params["final_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+
+
+def mamba_loss(params, batch, *, cfg, pctx):
+    from repro.models.layers import lm_cross_entropy
+
+    x = mamba_apply(params, batch["tokens"], cfg=cfg, pctx=pctx)
+    loss, denom = lm_cross_entropy(
+        x, _head_w(params, cfg).astype(jnp.dtype(cfg.dtype)), batch["labels"],
+        mask=batch.get("mask"), chunk=cfg.logits_chunk,
+        compute_dtype=jnp.dtype(cfg.dtype), pctx=pctx,
+    )
+    return loss, {"ce_loss": loss, "tokens": denom}
+
+
+def mamba_decode_step(params, token_ids, state, *, cfg, pctx):
+    """token_ids (B,) -> (logits (B,V), new_state).  O(1) per token."""
+    x = params["embed"]["table"][token_ids[:, None]].astype(jnp.dtype(cfg.dtype))
+
+    def body(x, xs):
+        p_l, ssm_l, conv_l = xs
+        x, h, c = mamba_layer_decode(p_l, x, ssm_l, conv_l, cfg=cfg)
+        return x, (h, c)
+
+    x, (hs, cs) = jax.lax.scan(
+        body, x, (params["layers"], state["ssm"], state["conv"])
+    )
+    x = apply_norm(params["final_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(jnp.dtype(cfg.dtype)),
+        _head_w(params, cfg).astype(jnp.dtype(cfg.dtype)),
+    )[:, 0]
+    return logits, {"ssm": hs, "conv": cs}

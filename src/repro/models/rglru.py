@@ -1,0 +1,315 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention.
+
+Block pattern (recurrentgemma-2b): (rec, rec, attn) repeating over 26 layers
+(8 full periods + a (rec, rec) tail).  Scan-over-layers needs homogeneous
+bodies, so parameters are stacked per *superblock* (one period) with the tail
+scanned separately — compile cost stays O(1) in depth.
+
+  * RG-LRU recurrence runs on the SP prefix-scan substrate (``sp_scan``) —
+    contiguous layout, log-P ppermute rounds.
+  * local attention (window 2048, MQA kv=1) uses the halo-exchange strategy —
+    and a **ring-buffer KV cache** of exactly ``window`` slots during decode,
+    which is what makes the long_500k cell run with O(window) memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import ParallelContext, sp_scan
+from repro.models.attention import attention, attention_decode, attention_init
+from repro.models.layers import (
+    apply_norm,
+    lm_cross_entropy,
+    dense,
+    dense_init,
+    embed_init,
+    mlp,
+    mlp_init,
+    norm_init,
+)
+
+__all__ = [
+    "init_rg",
+    "rg_loss",
+    "rg_decode_step",
+    "init_rg_state",
+]
+
+_C_RGLRU = 8.0
+
+
+def _rec_block_init(key, cfg):
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 7)
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": norm_init(d, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+        "lin_y": dense_init(ks[0], d, lru, dtype=cfg.param_dtype),
+        "lin_x": dense_init(ks[1], d, lru, dtype=cfg.param_dtype),
+        "conv_w": jax.random.normal(ks[2], (K, lru), pd) / jnp.sqrt(K),
+        "conv_b": jnp.zeros((lru,), pd),
+        "gate_a": dense_init(ks[3], lru, lru, dtype=cfg.param_dtype),
+        "gate_i": dense_init(ks[4], lru, lru, dtype=cfg.param_dtype),
+        # Λ init so that a^c lands in [0.9, 0.999] at r=1 (griffin appendix).
+        "lam": jax.random.uniform(ks[5], (lru,), pd, 2.0, 6.0),
+        "lin_out": dense_init(ks[6], lru, d, dtype=cfg.param_dtype),
+    }
+
+
+def _mlp_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+        "mlp": mlp_init(k1, cfg.d_model, cfg.d_ff, mlp_type=cfg.mlp_type, dtype=cfg.param_dtype),
+    }
+
+
+def _attn_block_init(key, cfg):
+    return {
+        "norm": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+        "attn": attention_init(key, cfg),
+    }
+
+
+def _super_init(key, cfg):
+    """One (rec, rec, attn) period, each temporal block followed by an MLP."""
+    ks = jax.random.split(key, 6)
+    return {
+        "rec1": _rec_block_init(ks[0], cfg),
+        "mlp1": _mlp_block_init(ks[1], cfg),
+        "rec2": _rec_block_init(ks[2], cfg),
+        "mlp2": _mlp_block_init(ks[3], cfg),
+        "attn": _attn_block_init(ks[4], cfg),
+        "mlp3": _mlp_block_init(ks[5], cfg),
+    }
+
+
+def init_rg(cfg, key):
+    period = len(cfg.block_pattern) or 3
+    n_super, n_tail = divmod(cfg.n_layers, period)
+    k_emb, k_sup, k_tail, k_fin = jax.random.split(key, 4)
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype=cfg.param_dtype),
+        "supers": jax.vmap(lambda k: _super_init(k, cfg))(
+            jax.random.split(k_sup, n_super)
+        ),
+        "final_norm": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+    }
+    if n_tail:
+        params["tail"] = jax.vmap(
+            lambda k: {"rec": _rec_block_init(k, cfg), "mlp": _mlp_block_init(k, cfg)}
+        )(jax.random.split(k_tail, n_tail))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_fin, cfg.d_model, cfg.vocab_size, dtype=cfg.param_dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward blocks
+# ---------------------------------------------------------------------------
+
+
+def _rglru(p, xb, *, cfg, pctx):
+    """RG-LRU recurrence on conv'd branch xb (B,S,lru) -> (B,S,lru)."""
+    from repro.sharding import constrain_act
+
+    xf = xb.astype(jnp.float32)
+    # constrain gate projections to the (data, seq) layout so the sp_scan
+    # boundary never all-gathers activations (§Perf iter 2)
+    r = jax.nn.sigmoid(constrain_act(dense(p["gate_a"], xb, jnp.float32), pctx))
+    i = jax.nn.sigmoid(constrain_act(dense(p["gate_i"], xb, jnp.float32), pctx))
+    log_a = -_C_RGLRU * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * xf)
+    h = sp_scan(a, b, pctx=pctx, axis=1)
+    return h.astype(xb.dtype)
+
+
+def _rec_block(p, x, *, cfg, pctx):
+    from repro.sharding import constrain_act
+
+    dt = jnp.dtype(cfg.dtype)
+    h = apply_norm(p["norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    yb = jax.nn.gelu(constrain_act(dense(p["lin_y"], h, dt), pctx))
+    xb = constrain_act(dense(p["lin_x"], h, dt), pctx)
+    K = cfg.ssm_conv
+    xp = jnp.pad(xb, ((0, 0), (K - 1, 0), (0, 0)))
+    xb = sum(xp[:, k : k + x.shape[1], :] * p["conv_w"].astype(dt)[k] for k in range(K))
+    xb = xb + p["conv_b"].astype(dt)
+    hrec = _rglru(p, xb, cfg=cfg, pctx=pctx)
+    return constrain_act(x + dense(p["lin_out"], hrec * yb, dt), pctx)
+
+
+def _mlp_block(p, x, *, cfg):
+    h = apply_norm(p["norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    return x + mlp(p["mlp"], h, mlp_type=cfg.mlp_type, compute_dtype=jnp.dtype(cfg.dtype))
+
+
+def _attn_block(p, x, positions, *, cfg, pctx):
+    h = apply_norm(p["norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    return x + attention(
+        p["attn"], h, positions, cfg=cfg, pctx=pctx, window=cfg.window
+    )
+
+
+def _super_block(p, x, positions, *, cfg, pctx):
+    x = _rec_block(p["rec1"], x, cfg=cfg, pctx=pctx)
+    x = _mlp_block(p["mlp1"], x, cfg=cfg)
+    x = _rec_block(p["rec2"], x, cfg=cfg, pctx=pctx)
+    x = _mlp_block(p["mlp2"], x, cfg=cfg)
+    x = _attn_block(p["attn"], x, positions, cfg=cfg, pctx=pctx)
+    x = _mlp_block(p["mlp3"], x, cfg=cfg)
+    return x
+
+
+def rg_apply(params, tokens, positions, *, cfg, pctx):
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+
+    def body(x, p_s):
+        return _super_block(p_s, x, positions, cfg=cfg, pctx=pctx), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["supers"])
+
+    if "tail" in params:
+
+        def tail_body(x, p_t):
+            x = _rec_block(p_t["rec"], x, cfg=cfg, pctx=pctx)
+            x = _mlp_block(p_t["mlp"], x, cfg=cfg)
+            return x, None
+
+        if cfg.remat != "none":
+            tail_body = jax.checkpoint(
+                tail_body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        x, _ = jax.lax.scan(tail_body, x, params["tail"])
+
+    return apply_norm(params["final_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+
+
+def _head_w(params, cfg):
+    return (
+        params["embed"]["table"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    )
+
+
+def rg_loss(params, batch, *, cfg, pctx):
+    x = rg_apply(params, batch["tokens"], batch["positions"], cfg=cfg, pctx=pctx)
+    loss, denom = lm_cross_entropy(
+        x, _head_w(params, cfg).astype(jnp.dtype(cfg.dtype)), batch["labels"],
+        mask=batch.get("mask"), chunk=cfg.logits_chunk,
+        compute_dtype=jnp.dtype(cfg.dtype), pctx=pctx,
+    )
+    return loss, {"ce_loss": loss, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# decode (O(window) attention cache + O(1) recurrent state)
+# ---------------------------------------------------------------------------
+
+
+def init_rg_state(cfg, batch: int):
+    from repro.kernels.flash_attention import PAD_POS
+
+    period = len(cfg.block_pattern) or 3
+    n_super, n_tail = divmod(cfg.n_layers, period)
+    lru = cfg.lru_width or cfg.d_model
+    K = cfg.ssm_conv
+    W = cfg.window
+    n_rec_s = 2  # rec blocks per superblock
+    dt = jnp.dtype(cfg.dtype)
+    state = {
+        "rec_h": jnp.zeros((n_super, n_rec_s, batch, lru), jnp.float32),
+        "rec_conv": jnp.zeros((n_super, n_rec_s, batch, K - 1, lru), dt),
+        "k": jnp.zeros((n_super, batch, W, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((n_super, batch, W, cfg.n_kv_heads, cfg.head_dim), dt),
+        "pos": jnp.full((batch, W), PAD_POS, jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if n_tail:
+        state["tail_h"] = jnp.zeros((n_tail, batch, lru), jnp.float32)
+        state["tail_conv"] = jnp.zeros((n_tail, batch, K - 1, lru), dt)
+    return state
+
+
+def _rec_block_decode(p, x, h_state, conv_state, *, cfg):
+    dt = jnp.dtype(cfg.dtype)
+    h = apply_norm(p["norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    yb = jax.nn.gelu(dense(p["lin_y"], h, dt))  # (B,1,lru)
+    xb = dense(p["lin_x"], h, dt)
+    window = jnp.concatenate([conv_state, xb], axis=1)  # (B,K,lru)
+    xb = jnp.einsum("bkd,kd->bd", window, p["conv_w"].astype(dt)) + p[
+        "conv_b"
+    ].astype(dt)
+    new_conv = window[:, 1:]
+    xf = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(p["gate_a"], xb[:, None], jnp.float32))[:, 0]
+    i = jax.nn.sigmoid(dense(p["gate_i"], xb[:, None], jnp.float32))[:, 0]
+    a = jnp.exp(-_C_RGLRU * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r)
+    h_new = a * h_state + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * xf)
+    y = (h_new.astype(dt) * yb[:, 0])[:, None]
+    return x + dense(p["lin_out"], y, dt), h_new, new_conv
+
+
+def rg_decode_step(params, token_ids, state, *, cfg, pctx):
+    B = token_ids.shape[0]
+    W = cfg.window
+    positions = state["len"][:, None].astype(jnp.int32)
+    write_index = state["len"] % W  # ring buffer slot
+    x = params["embed"]["table"][token_ids[:, None]].astype(jnp.dtype(cfg.dtype))
+    pos_cache = state["pos"].at[jnp.arange(B), write_index].set(positions[:, 0])
+
+    def body(x, xs):
+        p_s, rec_h, rec_conv, kc, vc = xs
+        x, h1, c1 = _rec_block_decode(
+            p_s["rec1"], x, rec_h[0], rec_conv[0], cfg=cfg
+        )
+        x = _mlp_block(p_s["mlp1"], x, cfg=cfg)
+        x, h2, c2 = _rec_block_decode(
+            p_s["rec2"], x, rec_h[1], rec_conv[1], cfg=cfg
+        )
+        x = _mlp_block(p_s["mlp2"], x, cfg=cfg)
+        h = apply_norm(p_s["attn"]["norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        y, kc, vc = attention_decode(
+            p_s["attn"]["attn"], h, positions, kc, vc, pos_cache, write_index,
+            cfg=cfg, pctx=pctx, window=cfg.window,
+        )
+        x = x + y
+        x = _mlp_block(p_s["mlp3"], x, cfg=cfg)
+        return x, (jnp.stack([h1, h2]), jnp.stack([c1, c2]), kc, vc)
+
+    x, (rec_h, rec_conv, ks, vs) = jax.lax.scan(
+        body, x, (params["supers"], state["rec_h"], state["rec_conv"],
+                  state["k"], state["v"])
+    )
+
+    new_state = dict(state)
+    new_state.update(
+        rec_h=rec_h, rec_conv=rec_conv, k=ks, v=vs, pos=pos_cache,
+        len=state["len"] + 1,
+    )
+
+    if "tail" in params:
+
+        def tail_body(x, xs):
+            p_t, th, tc = xs
+            x, h1, c1 = _rec_block_decode(p_t["rec"], x, th, tc, cfg=cfg)
+            x = _mlp_block(p_t["mlp"], x, cfg=cfg)
+            return x, (h1, c1)
+
+        x, (th, tc) = jax.lax.scan(
+            tail_body, x, (params["tail"], state["tail_h"], state["tail_conv"])
+        )
+        new_state.update(tail_h=th, tail_conv=tc)
+
+    x = apply_norm(params["final_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(jnp.dtype(cfg.dtype)),
+        _head_w(params, cfg).astype(jnp.dtype(cfg.dtype)),
+    )[:, 0]
+    return logits, new_state

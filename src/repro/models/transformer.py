@@ -1,0 +1,311 @@
+"""Dense (and MoE / VLM) decoder-only transformer, scan-over-layers.
+
+Families covered: qwen2-72b, granite-3-8b, qwen3-1.7b, olmo-1b (dense);
+qwen3-moe-30b-a3b, llama4-scout (moe, via models.moe); pixtral-12b (vlm —
+patch-embedding stub prepended to the token stream).
+
+Implementation notes:
+  * layer parameters are stacked (leading L dim) and the layer loop is a
+    ``lax.scan`` — one compiled layer body regardless of depth (essential for
+    the 512-device dry-run compile times);
+  * remat policy per config: "full" (nothing saved), "dots" (matmul outputs
+    saved), "none";
+  * the LM loss uses chunked cross-entropy — the full (B,S,V) logits tensor
+    is never materialized;
+  * activations get explicit sharding constraints at block boundaries so XLA
+    SPMD keeps the (data, seq) layout stable through the scan.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.api import ParallelContext
+from repro.models.attention import (
+    attention,
+    attention_decode,
+    attention_init,
+)
+from repro.models.layers import (
+    apply_norm,
+    lm_cross_entropy,
+    dense,
+    dense_init,
+    embed_init,
+    mlp,
+    mlp_init,
+    norm_init,
+)
+from repro.models.moe import moe_ffn, moe_init
+
+__all__ = [
+    "init_lm",
+    "lm_apply",
+    "lm_loss",
+    "lm_prefill",
+    "lm_decode_step",
+    "init_decode_cache",
+    "constrain",
+]
+
+
+def constrain(x, pctx: ParallelContext, spec_entries):
+    """Sharding constraint helper (no-op without a mesh)."""
+    if pctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pctx.mesh, P(*spec_entries))
+    )
+
+
+def _act_spec(pctx):
+    return (pctx.data_axis, pctx.seq_spec(), None)
+
+
+def _remat_policy(name):
+    if name == "none":
+        return None
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg):
+    ka, km, kn = jax.random.split(key, 3)
+    p = {
+        "attn": attention_init(ka, cfg),
+        "ln1": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+        "ln2": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_init(km, cfg)
+    else:
+        p["mlp"] = mlp_init(
+            km, cfg.d_model, cfg.d_ff, mlp_type=cfg.mlp_type, dtype=cfg.param_dtype
+        )
+    return p
+
+
+def init_lm(cfg, key):
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype=cfg.param_dtype),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys),
+        "final_norm": norm_init(
+            cfg.d_model, norm_type=cfg.norm_type, dtype=cfg.param_dtype
+        ),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            k_head, cfg.d_model, cfg.vocab_size, dtype=cfg.param_dtype
+        )
+    return params
+
+
+def _lm_head_w(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _block(p_l, x, positions, cfg, pctx):
+    h = apply_norm(p_l["ln1"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    x = x + attention(
+        p_l["attn"], h, positions, cfg=cfg, pctx=pctx, window=cfg.window
+    )
+    x = constrain(x, pctx, _act_spec(pctx))
+    h = apply_norm(p_l["ln2"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    if cfg.n_experts:
+        y, aux = moe_ffn(p_l["moe"], h, cfg, pctx)
+    else:
+        y = mlp(p_l["mlp"], h, mlp_type=cfg.mlp_type, compute_dtype=jnp.dtype(cfg.dtype))
+        aux = jnp.float32(0.0)
+    x = x + y
+    x = constrain(x, pctx, _act_spec(pctx))
+    return x, aux
+
+
+def _embed_inputs(params, tokens, cfg, pctx, prefix_embeds=None):
+    x = params["embed"]["table"][tokens].astype(jnp.dtype(cfg.dtype))
+    if prefix_embeds is not None:
+        # VLM stub frontend: patch embeddings occupy the first slots.
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def lm_apply(params, tokens, positions, *, cfg, pctx, prefix_embeds=None):
+    """Full forward, returns final hidden states ``(B, S, d)``."""
+    x = _embed_inputs(params, tokens, cfg, pctx, prefix_embeds)
+    x = constrain(x, pctx, _act_spec(pctx))
+
+    block = partial(_block, cfg=cfg, pctx=pctx)
+    policy = _remat_policy(cfg.remat)
+    if policy is not None:
+        block = jax.checkpoint(
+            lambda p_l, x, pos: _block(p_l, x, pos, cfg, pctx), policy=policy
+        )
+    else:
+        block = lambda p_l, x, pos: _block(p_l, x, pos, cfg, pctx)  # noqa: E731
+
+    def body(carry, p_l):
+        x, aux = carry
+        x, a = block(p_l, x, positions)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["layers"])
+    x = apply_norm(params["final_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    return x, aux
+
+
+def lm_loss(params, batch, *, cfg, pctx):
+    """Causal LM loss; batch: tokens/labels/positions (+mask, +patch_embeds)."""
+    x, aux = lm_apply(
+        params,
+        batch["tokens"],
+        batch["positions"],
+        cfg=cfg,
+        pctx=pctx,
+        prefix_embeds=batch.get("patch_embeds"),
+    )
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if batch.get("patch_embeds") is not None:
+        # Image-prefix positions carry no LM loss.
+        n_img = batch["patch_embeds"].shape[1]
+        B = labels.shape[0]
+        pad_lbl = jnp.zeros((B, n_img), labels.dtype)
+        labels = jnp.concatenate([pad_lbl, labels], axis=1)
+        m = jnp.concatenate(
+            [jnp.zeros((B, n_img), jnp.float32),
+             jnp.ones_like(batch["labels"], jnp.float32) if mask is None else mask],
+            axis=1,
+        )
+        mask = m
+    loss, denom = lm_cross_entropy(
+        x,
+        _lm_head_w(params, cfg).astype(jnp.dtype(cfg.dtype)),
+        labels,
+        mask=mask,
+        chunk=cfg.logits_chunk,
+        compute_dtype=jnp.dtype(cfg.dtype),
+        pctx=pctx,
+    )
+    total = loss + cfg.router_aux_coef * aux / max(cfg.n_layers, 1)
+    metrics = {"ce_loss": loss, "aux_loss": aux, "tokens": denom}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg, batch: int, max_len: int, pctx, dtype=None):
+    """Stacked-over-layers KV cache pytree (positions at PAD sentinel)."""
+    from repro.kernels.flash_attention import PAD_POS
+
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, max_len, Hkv, Dh), dtype),
+        "v": jnp.zeros((L, batch, max_len, Hkv, Dh), dtype),
+        "pos": jnp.full((batch, max_len), PAD_POS, jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def lm_prefill(params, tokens, positions, cache, prefix_embeds=None, *, cfg, pctx):
+    """Prefill: run the full sequence, fill cache slots [0, S)."""
+    x = _embed_inputs(params, tokens, cfg, pctx, prefix_embeds)
+    x = constrain(x, pctx, _act_spec(pctx))
+    S = x.shape[1]
+
+    def body(carry, xs):
+        x = carry
+        p_l, kc_l, vc_l = xs
+        h = apply_norm(p_l["ln1"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        y, new_cache = attention(
+            p_l["attn"], h, positions, cfg=cfg, pctx=pctx, window=cfg.window,
+            cache={"k": kc_l, "v": vc_l, "pos": positions},
+        )
+        x = x + y
+        h = apply_norm(p_l["ln2"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = moe_ffn(p_l["moe"], h, cfg, pctx)
+        else:
+            y = mlp(p_l["mlp"], h, mlp_type=cfg.mlp_type, compute_dtype=jnp.dtype(cfg.dtype))
+        x = constrain(x + y, pctx, _act_spec(pctx))
+        return x, (new_cache["k"], new_cache["v"])
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    x = apply_norm(params["final_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    last = x[:, -1:, :]
+    logits = jnp.einsum(
+        "bsd,dv->bsv", last.astype(jnp.dtype(cfg.dtype)),
+        _lm_head_w(params, cfg).astype(jnp.dtype(cfg.dtype)),
+    )
+    B = tokens.shape[0]
+    new_cache = {
+        "k": ks,
+        "v": vs,
+        "pos": jax.lax.dynamic_update_slice(cache["pos"], positions, (0, 0)),
+        "len": jnp.full((B,), S, jnp.int32),
+    }
+    return logits[:, 0], new_cache
+
+
+def lm_decode_step(params, token_ids, cache, *, cfg, pctx):
+    """One decode step for all requests: ``token_ids (B,)`` -> logits (B,V).
+
+    Per-request cache lengths (continuous batching): new K/V are written at
+    ``cache['len']`` slots, positions advance independently.
+    """
+    B = token_ids.shape[0]
+    write_index = cache["len"]  # (B,)
+    positions = write_index[:, None].astype(jnp.int32)  # global pos == length
+    x = params["embed"]["table"][token_ids[:, None]].astype(jnp.dtype(cfg.dtype))
+
+    pos_cache = cache["pos"].at[jnp.arange(B), write_index].set(positions[:, 0])
+
+    def body(x, xs):
+        p_l, kc_l, vc_l = xs
+        h = apply_norm(p_l["ln1"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        y, kc_l, vc_l = attention_decode(
+            p_l["attn"], h, positions, kc_l, vc_l, pos_cache, write_index,
+            cfg=cfg, pctx=pctx, window=cfg.window,
+        )
+        x = x + y
+        h = apply_norm(p_l["ln2"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = moe_ffn(p_l["moe"], h, cfg, pctx)
+        else:
+            y = mlp(p_l["mlp"], h, mlp_type=cfg.mlp_type, compute_dtype=jnp.dtype(cfg.dtype))
+        return x + y, (kc_l, vc_l)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(params["final_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(jnp.dtype(cfg.dtype)),
+        _lm_head_w(params, cfg).astype(jnp.dtype(cfg.dtype)),
+    )[:, 0]
+    new_cache = {"k": ks, "v": vs, "pos": pos_cache, "len": cache["len"] + 1}
+    return logits, new_cache

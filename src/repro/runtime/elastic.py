@@ -1,0 +1,56 @@
+"""Elastic re-meshing: continue a job on a different device set.
+
+When hosts die (or capacity arrives), the surviving devices form a new mesh
+and the training state is re-laid-out onto it.  Because checkpoints restore
+against *target* shardings (checkpoint/manager.py), elasticity reduces to:
+
+    new_mesh  = build_mesh(survivors)
+    new_specs = params_shardings(state, new_mesh)     # same rules, new mesh
+    state     = reshard(state, new_specs)             # device_put per leaf
+
+``shrink_mesh`` picks the largest (data', model') grid that fits the
+surviving device count while keeping the model axis intact if possible
+(the SP ring must keep dividing the sequence length).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import AxisType, Mesh, NamedSharding
+
+__all__ = ["shrink_mesh", "reshard", "ElasticState"]
+
+
+def shrink_mesh(devices, *, model_axis: int, axis_names=("data", "model")):
+    """Largest mesh over ``devices`` with a fixed model-axis size."""
+    n = len(devices)
+    model = model_axis
+    while model > 1 and (n % model or model > n):
+        model //= 2
+    data = n // model
+    devs = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(devs, axis_names, axis_types=(AxisType.Auto,) * len(axis_names))
+
+
+def reshard(tree, shardings):
+    """Re-lay-out a pytree onto new shardings (gather -> place)."""
+
+    def leaf(x, sh):
+        return jax.device_put(np.asarray(jax.device_get(x)), sh)
+
+    return jax.tree.map(leaf, tree, shardings)
+
+
+class ElasticState:
+    """Tracks the active mesh; rebuilds on device-set changes."""
+
+    def __init__(self, build_shardings):
+        # build_shardings(tree, mesh) -> matching tree of NamedShardings
+        self.build_shardings = build_shardings
+
+    def migrate(self, state, new_devices, *, model_axis: int):
+        mesh = shrink_mesh(new_devices, model_axis=model_axis)
+        sh = self.build_shardings(state, mesh)
+        return reshard(state, sh), mesh

@@ -1,0 +1,155 @@
+"""Training driver: jitted step, microbatch accumulation, metrics, checkpoints.
+
+The Trainer is deliberately mesh-agnostic: the same loop drives the 1-device
+CPU smoke run and the 512-chip dry-run config — only the ParallelContext and
+shardings differ.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.runtime.straggler import StragglerDetector
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclass
+class TrainerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 20
+    total_steps: int = 100
+    microbatches: int = 1  # gradient accumulation factor
+    checkpoint_every: int = 50
+    checkpoint_dir: str | None = None
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+def cosine_lr(cfg: TrainerConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+class Trainer:
+    def __init__(self, bundle, tcfg: TrainerConfig, *, step_hook=None):
+        self.bundle = bundle
+        self.cfg = tcfg
+        self.ckpt = (
+            CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
+            if tcfg.checkpoint_dir
+            else None
+        )
+        self.straggler = StragglerDetector()
+        self.step_hook = step_hook  # test hook: called as (step,) before each step
+        self._jit_step = jax.jit(self._step)
+
+    # ------------------------------------------------------------ state
+
+    def init_state(self, key):
+        params = self.bundle.init(key)
+        return {"params": params, "opt": adamw_init(params), "step": jnp.int32(0)}
+
+    # ------------------------------------------------------------- step
+
+    def _step(self, state, batch):
+        cfg = self.cfg
+
+        def loss_fn(p, mb):
+            return self.bundle.loss(p, mb)
+
+        if cfg.microbatches > 1:
+            # gradient accumulation: scan over microbatches (B must divide)
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(cfg.microbatches, B // cfg.microbatches, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                (l, _m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state["params"], mb
+                )
+                return (
+                    jax.tree.map(jnp.add, gsum, g),
+                    lsum + l,
+                ), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc, (zero, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / cfg.microbatches, gsum)
+            loss = lsum / cfg.microbatches
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], batch
+            )
+
+        lr = cosine_lr(cfg, state["step"])
+        params, opt, om = adamw_update(
+            grads, state["opt"], state["params"], lr=lr, cfg=cfg.opt
+        )
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        return new_state, {"loss": loss, "lr": lr, **metrics, **om}
+
+    # ------------------------------------------------------------- loop
+
+    def run(self, state, data_iter, *, steps=None, log_every: int = 10, log=print):
+        steps = steps if steps is not None else self.cfg.total_steps
+        history = []
+        start_step = int(state["step"])
+        for i in range(start_step, steps):
+            if self.step_hook is not None:
+                self.step_hook(i)
+            batch = next(data_iter)
+            t0 = time.perf_counter()
+            state, metrics = self._jit_step(state, batch)
+            metrics["loss"].block_until_ready()
+            dt = time.perf_counter() - t0
+            flag = self.straggler.record(i, dt)
+            if flag:
+                log(f"[straggler] step {i}: {dt*1e3:.1f} ms ({flag})")
+            if i % log_every == 0 or i == steps - 1:
+                log(
+                    f"step {i:5d} loss {float(metrics['loss']):.4f} "
+                    f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f} ms"
+                )
+            history.append(float(metrics["loss"]))
+            if self.ckpt and (i + 1) % self.cfg.checkpoint_every == 0:
+                self.ckpt.save(
+                    i + 1,
+                    state,
+                    extra={"data": getattr(data_iter, "state_dict", dict)()},
+                    blocking=not self.cfg.async_checkpoint,
+                )
+        if self.ckpt:
+            self.ckpt.wait()
+        return state, history
+
+    # ------------------------------------------------------- restore
+
+    def restore_latest(self, template_state, data_iter=None, shardings=None):
+        if self.ckpt is None:
+            return None
+        step = self.ckpt.latest_step()
+        if step is None:
+            return None
+        state = self.ckpt.restore(step, template_state, shardings=shardings)
+        if data_iter is not None and hasattr(data_iter, "load_state_dict"):
+            data_iter.load_state_dict(self.ckpt.manifest(step)["extra"]["data"])
+        return state

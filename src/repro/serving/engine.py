@@ -1,0 +1,184 @@
+"""Batched serving engine with continuous batching.
+
+The TokenRing serving story: the KV cache stays sequence-sharded and
+resident (never moves), prefill runs the SP attention schedule, decode uses
+the lse-merge psum (core/decode.py).  This engine adds the request-level
+machinery around those steps:
+
+  * fixed ``max_batch`` decode slots; requests join as slots free up
+    (continuous batching — per-request cache lengths are native to the
+    position-based kernel masking);
+  * prefill-on-join: a new request's prompt is prefilled into its slot's
+    cache region while other slots keep decoding (chunked prefill is the
+    natural extension; prompts here are prefilled in one shot per slot);
+  * greedy or temperature sampling; EOS / max-token stop conditions;
+  * simple FCFS queue with throughput/latency accounting for the benchmark
+    harness.
+
+For the single-slot-prefill step we reuse ``decode_step`` token-by-token
+over the prompt (exact, cache-filling); model families with a fused
+``prefill`` (dense/moe/vlm) can batch-prefill aligned prompts.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    # filled by the engine:
+    output: list = field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float | None = None
+    t_done: float | None = None
+
+
+class ServingEngine:
+    def __init__(self, bundle, params, *, max_batch: int, max_len: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.bundle = bundle
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.state = bundle.init_serve_state(max_batch, max_len)
+        self.slots: list[Request | None] = [None] * max_batch
+        self.queue: list[Request] = []
+        self.done: list[Request] = []
+        self._step = jax.jit(bundle.decode_step)
+        self._uid = 0
+
+    # ------------------------------------------------------------- API
+
+    def submit(self, prompt, max_new_tokens=16, eos_id=None) -> Request:
+        self._uid += 1
+        req = Request(
+            uid=self._uid,
+            prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=max_new_tokens,
+            eos_id=eos_id,
+        )
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+        return req
+
+    def run(self, *, max_steps: int = 10_000):
+        """Drive until queue + slots drain (or max_steps)."""
+        for _ in range(max_steps):
+            self._admit()
+            if all(s is None for s in self.slots):
+                if not self.queue:
+                    break
+                continue
+            self._decode_once()
+        return self.done
+
+    # --------------------------------------------------------- internals
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self._prefill_slot(i, req)
+
+    def _reset_slot_cache(self, i):
+        """Zero one slot's cache row (len/pos) — other slots untouched."""
+
+        def fix(path, leaf):
+            name = str(getattr(path[-1], "key", ""))
+            if name == "len":
+                return leaf.at[i].set(0)
+            if name == "pos":
+                from repro.kernels.flash_attention import PAD_POS
+
+                return leaf.at[i].set(PAD_POS)
+            return leaf
+
+        self.state = jax.tree_util.tree_map_with_path(fix, self.state)
+
+    def _prefill_slot(self, i, req):
+        """Feed the prompt through decode steps for this slot only.
+
+        Other active slots receive a dummy token and have their (len, cache)
+        rolled back afterwards — functionally a per-slot prefill.  (A fused
+        chunked-prefill path is the optimization; this is the correctness
+        baseline the tests pin down.)
+        """
+        self._reset_slot_cache(i)
+        others = [
+            (j, s) for j, s in enumerate(self.slots) if s is not None and j != i
+        ]
+        # snapshot other slots' lengths to restore after the dummy feeds
+        lens_before = np.asarray(self.state["len"])
+        for t, tok in enumerate(req.prompt[:-1]):
+            toks = np.zeros((self.max_batch,), np.int32)
+            toks[i] = tok
+            logits, self.state = self._step(self.params, jnp.asarray(toks), self.state)
+            # roll back the other slots (their dummy token must not count)
+            if others:
+                new_len = np.asarray(self.state["len"]).copy()
+                for j, _ in others:
+                    new_len[j] = lens_before[j]
+                self.state = dict(self.state, len=jnp.asarray(new_len))
+        # the last prompt token is fed by the first decode step
+        req._next_token = int(req.prompt[-1])  # type: ignore[attr-defined]
+
+    def _sample(self, logits):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature).astype(jnp.int32)
+
+    def _decode_once(self):
+        toks = np.zeros((self.max_batch,), np.int32)
+        active = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            toks[i] = getattr(req, "_next_token", 0)
+            active.append(i)
+        logits, self.state = self._step(self.params, jnp.asarray(toks), self.state)
+        nxt = np.asarray(self._sample(logits))
+        now = time.perf_counter()
+        lens = np.asarray(self.state["len"]).copy()
+        for i in active:
+            req = self.slots[i]
+            tok = int(nxt[i])
+            if req.t_first is None:
+                req.t_first = now
+            req.output.append(tok)
+            req._next_token = tok  # type: ignore[attr-defined]
+            finished = len(req.output) >= req.max_new_tokens or (
+                req.eos_id is not None and tok == req.eos_id
+            )
+            if finished or lens[i] >= self.max_len - 1:
+                req.t_done = now
+                self.done.append(req)
+                self.slots[i] = None
+
+    # ------------------------------------------------------------ stats
+
+    def stats(self):
+        lat = [r.t_done - r.t_submit for r in self.done if r.t_done]
+        ttft = [r.t_first - r.t_submit for r in self.done if r.t_first]
+        toks = sum(len(r.output) for r in self.done)
+        return {
+            "requests": len(self.done),
+            "tokens": toks,
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+        }

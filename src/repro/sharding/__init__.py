@@ -1,0 +1,45 @@
+"""Sharding rules + activation-constraint helpers."""
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import (
+    batch_shardings,
+    param_pspec,
+    params_shardings,
+    serve_state_shardings,
+)
+
+
+def constrain_act(x, pctx, *, seq_dim: int = 1):
+    """Pin an activation to the canonical (data, seq) layout.
+
+    Placed after every projection so XLA gathers the (small, ZeRO-sharded)
+    weights instead of the (large) activations at shard_map boundaries —
+    without this, output-dim-sharded weights make XLA emit Megatron-style
+    output-sharded activations and then all-gather them at the SP attention /
+    scan entry (measured: 2.1 GB/layer on falcon-mamba prefill_32k; see
+    EXPERIMENTS.md §Perf iteration 1).
+    """
+    if pctx is None or pctx.mesh is None:
+        return x
+    entries = [None] * x.ndim
+    if pctx.data_axis is not None and x.shape[0] % pctx.mesh.shape[pctx.data_axis] == 0:
+        entries[0] = pctx.data_axis
+    # Only pin the seq dim when it actually shards (decode has S == 1; a
+    # degenerate constraint there forces XLA into pathological repairs —
+    # measured as f32 weight all-gathers per decode layer, §Perf iter 3).
+    if x.ndim > 1 and x.shape[seq_dim] % pctx.sp_degree == 0:
+        entries[seq_dim] = pctx.seq_spec()
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pctx.mesh, P(*entries))
+    )
+
+
+__all__ = [
+    "batch_shardings",
+    "param_pspec",
+    "params_shardings",
+    "serve_state_shardings",
+    "constrain_act",
+]

@@ -1,0 +1,180 @@
+"""Parameter & input sharding rules for the production mesh.
+
+Weights use ZeRO-3-style 2D sharding purely for *storage*: a 2-D+ parameter
+shards its penultimate dim over the data group (``("pod","data")`` multi-pod,
+``("data",)`` single-pod) and its last dim over ``model``; XLA SPMD inserts
+just-in-time all-gathers per scan step and reduce-scatters for the grads
+(this is the FSDP pattern — compute stays (data x sequence)-parallel, memory
+is minimal).  Stacked-layer leading dims (under layers/supers/tail/...)
+are never sharded.  Dims that don't divide evenly fall back to fewer axes,
+then to replication — the rule is total, every parameter gets a legal spec.
+
+Expert weights (E, d, f) naturally shard E over ``model`` — expert
+parallelism — because E is the stack-exempt *first* real dim for those.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_pspec",
+    "params_shardings",
+    "batch_shardings",
+    "data_group",
+]
+
+_STACKED = ("layers", "supers", "tail", "enc_layers", "dec_layers")
+_EXPERT_KEYS = ("wg", "wu", "wd")  # (E, d, f) expert stacks
+
+
+def data_group(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh, axes):
+    n = 1
+    for a in axes if isinstance(axes, tuple) else (axes,):
+        n *= mesh.shape[a]
+    return n
+
+
+def _divides(dim, mesh, axes):
+    return axes is not None and dim % _axis_size(mesh, axes) == 0
+
+
+def param_pspec(path, shape, mesh: Mesh, mode: str = "train") -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``mode="train"``: ZeRO-3 2D storage sharding (weights gathered per layer
+    step; right when activations dominate).
+    ``mode="serve"``: Megatron-style — last real dim over ``model`` only,
+    replicated over the data group.  Decode activations are tiny (one token),
+    so resident TP-sharded weights beat per-layer gathers by orders of
+    magnitude (§Perf iter 3).
+    """
+    keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    stacked = any(k in _STACKED for k in keys)
+    is_expert = keys and keys[-1] in _EXPERT_KEYS
+
+    dims = list(shape)
+    entries: list = [None] * len(dims)
+    start = 1 if stacked else 0  # skip the layer-stack dim
+    dg = data_group(mesh)
+    model = "model"
+
+    if mode == "serve":
+        real = list(range(start, len(dims)))
+        if is_expert and len(real) == 3 and _divides(dims[real[0]], mesh, (model,)):
+            entries[real[0]] = model  # expert-parallel stays on model
+            return P(*entries)
+        # Megatron pairing: output projections (wo/down/...) are ROW-sharded
+        # (contraction dim over model) so they compose with the col-sharded
+        # qkv/gate/up without resharding the tiny decode activations.
+        row_names = {"wo", "down", "out", "out_proj", "lin_out"}
+        parent = keys[-2] if len(keys) >= 2 else None
+        prefer = real[:1] + real[-1:] if (parent in row_names or (keys and keys[-1] in row_names)) else (
+            (real[-1:] if real else []) + (real[-2:-1] if len(real) > 1 else [])
+        )
+        for d in prefer:
+            if _divides(dims[d], mesh, (model,)):
+                entries[d] = model
+                return P(*entries)
+        return P(*entries)
+
+    if is_expert and len(dims) - start == 3:
+        # (E, d_in, d_out): experts over model (EP), d_in over data group.
+        e_dim, din, dout = start, start + 1, start + 2
+        if _divides(dims[e_dim], mesh, (model,)):
+            entries[e_dim] = model
+        if _divides(dims[din], mesh, dg):
+            entries[din] = dg if len(dg) > 1 else dg[0]
+        return P(*entries)
+
+    real = list(range(start, len(dims)))
+    if len(real) >= 2:
+        a, b = real[-2], real[-1]
+        if _divides(dims[a], mesh, dg) and _divides(dims[b], mesh, (model,)):
+            entries[a] = dg if len(dg) > 1 else dg[0]
+            entries[b] = model
+        elif _divides(dims[b], mesh, dg) and _divides(dims[a], mesh, (model,)):
+            entries[a] = model
+            entries[b] = dg if len(dg) > 1 else dg[0]
+        elif _divides(dims[b], mesh, dg):
+            entries[b] = dg if len(dg) > 1 else dg[0]
+        elif _divides(dims[a], mesh, dg):
+            entries[a] = dg if len(dg) > 1 else dg[0]
+        elif _divides(dims[b], mesh, (model,)):
+            entries[b] = model
+    elif len(real) == 1:
+        # 1-D (biases, norms): shard only if comfortably large.
+        d = real[0]
+        if dims[d] >= 4096 and _divides(dims[d], mesh, dg):
+            entries[d] = dg if len(dg) > 1 else dg[0]
+    return P(*entries)
+
+
+def params_shardings(param_specs, mesh: Mesh, mode: str = "train"):
+    """Tree of NamedShardings matching a tree of ShapeDtypeStructs/arrays."""
+
+    def leaf(path, x):
+        return NamedSharding(mesh, param_pspec(path, x.shape, mesh, mode))
+
+    return jax.tree_util.tree_map_with_path(leaf, param_specs)
+
+
+def batch_shardings(batch_specs, mesh: Mesh, pctx):
+    """Shardings for a train/prefill batch dict (tokens/labels/positions/...)."""
+    dp = pctx.data_axis
+    seq = pctx.seq_spec()
+
+    def leaf(path, x):
+        key = getattr(path[-1], "key", None)
+        nd = len(x.shape)
+        if key in ("frames",):
+            # enc frames (B, S_enc, d): encoder seq shards too (padded length)
+            return NamedSharding(mesh, P(dp, seq, None))
+        if key in ("patch_embeds",):
+            return NamedSharding(mesh, P(dp, None, None))
+        if nd == 2:
+            return NamedSharding(mesh, P(dp, seq))
+        if nd == 1:
+            return NamedSharding(mesh, P(dp))
+        return NamedSharding(mesh, P(dp, *([None] * (nd - 1))))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_specs)
+
+
+def serve_state_shardings(state_specs, mesh: Mesh, pctx, cfg):
+    """Shardings for decode caches/states (sequence dim over SP axes)."""
+    dp = pctx.data_axis
+    seq = pctx.seq_spec()
+
+    def leaf(path, x):
+        keys = [getattr(k, "key", None) for k in path]
+        nd = len(x.shape)
+        name = keys[-1] if keys else None
+        if name in ("k", "v", "xk", "xv"):
+            # (L, B, S, Hkv, D): seq over SP axes, batch over data.
+            return NamedSharding(mesh, P(None, dp, seq, None, None))
+        if name == "pos" or name == "enc_pos":
+            return NamedSharding(mesh, P(dp, seq))
+        if name == "len":
+            return NamedSharding(mesh, P(dp))
+        if name == "ssm":  # (L, B, di, N): d_inner over model
+            return NamedSharding(mesh, P(None, dp, seq, None))
+        if name == "conv":  # (L, B, K-1, di)
+            return NamedSharding(mesh, P(None, dp, None, seq))
+        if name in ("rec_h",):  # (n_super, 2, B, lru)
+            return NamedSharding(mesh, P(None, None, dp, seq))
+        if name in ("rec_conv",):  # (n_super, 2, B, K-1, lru)
+            return NamedSharding(mesh, P(None, None, dp, None, seq))
+        if name in ("tail_h",):
+            return NamedSharding(mesh, P(None, dp, seq))
+        if name in ("tail_conv",):
+            return NamedSharding(mesh, P(None, dp, None, seq))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(leaf, state_specs)

@@ -1,0 +1,7 @@
+"""Multi-device check programs, run in subprocesses by the test suite.
+
+Each module here sets ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+*before* importing jax, which cannot be done inside the main pytest process
+(device count locks on first jax init, and the suite's single-device tests
+must keep seeing one device).
+"""

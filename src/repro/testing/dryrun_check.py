@@ -1,0 +1,109 @@
+"""Mini dry-run on 8 simulated devices: the launch/analysis plumbing end-to-end.
+
+Compiles a reduced model's train step on a (2,4) mesh for several strategies
+and checks the HLO roofline analyzer's accounting — in particular the
+per-direction link attribution that distinguishes TokenRing (both directions
+loaded) from Ring Attention (one direction idle): the property the paper is
+about, and a regression test for the source_target_pairs parsing.
+"""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_CHECK_DEVICES", "8")
+    + " "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS  # noqa: E402
+from repro.core.api import ParallelContext  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.train_step import make_train_step  # noqa: E402
+from repro.models import build_model, input_specs  # noqa: E402
+from repro.models.config import ShapeConfig  # noqa: E402
+from repro.optim.adamw import adamw_init  # noqa: E402
+from repro.sharding.rules import batch_shardings, params_shardings  # noqa: E402
+
+
+def _mesh():
+    return jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+
+
+def _compile(strategy):
+    mesh = _mesh()
+    cfg = ARCHS["qwen3-1.7b"].reduced(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16, d_ff=128,
+        vocab_size=256, logits_chunk=64, remat="full", dtype="float32",
+    )
+    pctx = ParallelContext(
+        mesh=mesh, sp_axes=("model",), strategy=strategy, impl="xla",
+        block_q=64, block_k=64,
+    )
+    bundle = build_model(cfg, pctx)
+    shape = ShapeConfig("mini", 512, 8, "train")
+    _, batch_specs = input_specs(cfg, shape)
+    params_specs = jax.eval_shape(bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    opt_specs = jax.eval_shape(adamw_init, params_specs)
+    p_sh = params_shardings(params_specs, mesh)
+    o_sh = {
+        "step": NamedSharding(mesh, P()),
+        "m": params_shardings(opt_specs["m"], mesh),
+        "v": params_shardings(opt_specs["v"], mesh),
+    }
+    b_sh = batch_shardings(batch_specs, mesh, pctx)
+    # forward pass (the paper's inference setting) — in a train step the
+    # reverse-direction grad ppermutes symmetrize both strategies.
+    compiled = (
+        jax.jit(bundle.loss, in_shardings=(p_sh, b_sh))
+        .lower(params_specs, batch_specs)
+        .compile()
+    )
+    stats = analyze_hlo(compiled.as_text(), world=8)
+    mem = compiled.memory_analysis()
+    # keep the full train step compiling too (plumbing check)
+    step = make_train_step(bundle)
+    jax.jit(step, in_shardings=(p_sh, o_sh, b_sh), donate_argnums=(0, 1)).lower(
+        params_specs, opt_specs, batch_specs
+    ).compile()
+    return stats, mem
+
+
+def main(argv):
+    assert len(jax.devices()) >= 8
+    ring = _compile("ring")[0]
+    tok, mem = _compile("tokenring")
+
+    assert ring.dot_flops > 0 and tok.dot_flops > 0
+    assert mem.temp_size_in_bytes > 0
+    # Ring Attention (fwd pass): KV rotates +1 only -> one direction loaded.
+    assert ring.link_bytes_fwd > 0, "permute accounting broken"
+    # (the residual bwd traffic is CE chunk-resharding, not the KV ring)
+    assert ring.link_bytes_bwd < 0.5 * ring.link_bytes_fwd, (
+        ring.link_bytes_fwd, ring.link_bytes_bwd,
+    )
+    # TokenRing: both directions loaded, roughly evenly.
+    assert tok.link_bytes_fwd > 0 and tok.link_bytes_bwd > 0
+    balance = min(tok.link_bytes_fwd, tok.link_bytes_bwd) / max(
+        tok.link_bytes_fwd, tok.link_bytes_bwd
+    )
+    assert balance > 0.5, f"tokenring should load both directions: {balance}"
+    # and tokenring's max-direction load beats unidirectional ring's (MHA).
+    assert max(tok.link_bytes_fwd, tok.link_bytes_bwd) < ring.link_bytes_fwd * 1.05, (
+        tok.link_bytes_fwd, tok.link_bytes_bwd, ring.link_bytes_fwd,
+    )
+    print(
+        f"PASS mini-dryrun: ring fwd/bwd = {ring.link_bytes_fwd:.2e}/"
+        f"{ring.link_bytes_bwd:.2e}; tokenring = {tok.link_bytes_fwd:.2e}/"
+        f"{tok.link_bytes_bwd:.2e} (balance {balance:.2f})"
+    )
+    print("ALL CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -1,0 +1,345 @@
+"""Multi-device SP-strategy correctness checks (run as ``python -m``).
+
+Verifies, on 8 simulated host devices, that every sequence-parallel strategy
+(ring, ring_bidir, tokenring, tokenring_faithful, ulysses, multi-pod hybrid,
+decode, recurrence) matches the single-device oracle — forward AND gradients —
+under zigzag and contiguous layouts, MHA and GQA.
+
+Usage:  PYTHONPATH=src python -m repro.testing.strategy_check [check ...]
+Prints ``PASS <name>`` per check; non-zero exit on any failure.
+"""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_CHECK_DEVICES", "8")
+    + " "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import ParallelContext, sp_attention, sp_decode, sp_scan  # noqa: E402
+from repro.core.zigzag import to_zigzag, from_zigzag  # noqa: E402
+from repro.kernels.flash_attention import PAD_POS  # noqa: E402
+from repro.kernels.ref import attention_reference  # noqa: E402
+
+TOL = dict(atol=2e-4, rtol=2e-4)
+
+
+def _data(B=2, S=256, Hq=4, Hkv=4, D=32, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    return q, k, v
+
+
+def _layout(x, P_sp, layout):
+    return to_zigzag(x, P_sp, axis=1) if layout == "zigzag" else x
+
+
+def _positions(S, P_sp, layout):
+    pos = jnp.arange(S, dtype=jnp.int32)
+    if layout == "zigzag":
+        pos = to_zigzag(pos[None, :, None], P_sp, axis=1)[0, :, 0]
+    return pos
+
+
+def check_strategies():
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    for strategy in ["ring", "ring_bidir", "tokenring", "tokenring_faithful", "ulysses"]:
+        for layout, causal, (Hq, Hkv) in [
+            ("zigzag", True, (4, 4)),
+            ("zigzag", True, (8, 4)),
+            ("contig", False, (4, 4)),
+        ]:
+            if strategy == "ulysses" and Hkv % 4:
+                continue
+            pctx = ParallelContext(
+                mesh=mesh, sp_axes=("model",), strategy=strategy,
+                layout=layout, impl="xla", block_q=64, block_k=64,
+            )
+            q, k, v = _data(Hq=Hq, Hkv=Hkv, seed=hash((strategy, layout)) % 2**31)
+            S = q.shape[1]
+            ref, _ = attention_reference(q, k, v, causal=causal)
+            qz, kz, vz = (_layout(x, 4, layout) for x in (q, k, v))
+            pos = _positions(S, 4, layout)
+            out = jax.jit(
+                lambda q, k, v, p: sp_attention(
+                    q, k, v, p, p, pctx=pctx, causal=causal
+                )
+            )(qz, kz, vz, pos)
+            ref_l = _layout(ref, 4, layout)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref_l), **TOL)
+            print(f"PASS strategy={strategy} layout={layout} Hq={Hq} Hkv={Hkv}")
+
+
+def check_gradients():
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    q, k, v = _data(Hq=8, Hkv=4, seed=7)
+    S = q.shape[1]
+    rng = np.random.default_rng(9)
+    w = jnp.asarray(rng.standard_normal(q.shape), jnp.float32)
+    pos = _positions(S, 4, "zigzag")
+    wz = to_zigzag(w, 4, axis=1)
+
+    def ref_loss(q, k, v):
+        out, _ = attention_reference(q, k, v, causal=True)
+        return jnp.sum(out * w)
+
+    g_ref = jax.jit(jax.grad(ref_loss, argnums=(0, 1, 2)))(q, k, v)
+
+    for strategy in ["ring", "tokenring", "tokenring_faithful"]:
+        pctx = ParallelContext(
+            mesh=mesh, sp_axes=("model",), strategy=strategy, impl="xla",
+            block_q=64, block_k=64,
+        )
+
+        def sp_loss(q, k, v):
+            qz, kz, vz = (to_zigzag(x, 4, axis=1) for x in (q, k, v))
+            out = sp_attention(qz, kz, vz, pos, pos, pctx=pctx, causal=True)
+            return jnp.sum(out * wz)
+
+        g = jax.jit(jax.grad(sp_loss, argnums=(0, 1, 2)))(q, k, v)
+        for a, b, nm in zip(g, g_ref, "qkv"):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=5e-4, rtol=5e-4,
+                err_msg=f"{strategy} d{nm}",
+            )
+        print(f"PASS gradients strategy={strategy}")
+
+
+def check_hybrid():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    for inner in ["tokenring", "ring"]:
+        pctx = ParallelContext(
+            mesh=mesh, sp_axes=("pod", "model"), strategy="tokenring",
+            inner_strategy=inner, impl="xla", block_q=32, block_k=32,
+        )
+        q, k, v = _data(B=2, S=256, Hq=4, Hkv=2, D=16, seed=11)
+        S = q.shape[1]
+        P_sp = 4  # pod * model
+        ref, _ = attention_reference(q, k, v, causal=True)
+        qz, kz, vz = (to_zigzag(x, P_sp, axis=1) for x in (q, k, v))
+        pos = _positions(S, P_sp, "zigzag")
+        out = jax.jit(
+            lambda q, k, v, p: sp_attention(q, k, v, p, p, pctx=pctx, causal=True)
+        )(qz, kz, vz, pos)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(to_zigzag(ref, P_sp, axis=1)), **TOL
+        )
+        print(f"PASS hybrid inner={inner} (2 pods x 2 sp)")
+
+
+def check_decode():
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    pctx = ParallelContext(mesh=mesh, sp_axes=("model",), impl="xla", block_k=32)
+    B, Skv, Hq, Hkv, D = 2, 256, 8, 2, 32
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, D)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((B, Skv, Hkv, D)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, Skv, Hkv, D)), jnp.float32)
+    # only first `filled` slots are real; rest are padding sentinel
+    filled = 200
+    k_pos = jnp.where(
+        jnp.arange(Skv) < filled, jnp.arange(Skv), PAD_POS
+    ).astype(jnp.int32)
+    q_pos = jnp.array([filled], jnp.int32)
+    out = jax.jit(
+        lambda q, kc, vc, kp, qp: sp_decode(q, kc, vc, kp, qp, pctx=pctx)
+    )(q, kc, vc, k_pos, q_pos)
+    ref, _ = attention_reference(
+        q, kc[:, :filled], vc[:, :filled], causal=True,
+        q_pos=q_pos, k_pos=jnp.arange(filled, dtype=jnp.int32),
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+    print("PASS decode (sharded cache, partial fill)")
+
+
+def check_scan():
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    pctx = ParallelContext(mesh=mesh, sp_axes=("model",), layout="contig")
+    B, S, Dst = 2, 64, 8
+    rng = np.random.default_rng(17)
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (B, S, Dst)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, S, Dst)), jnp.float32)
+    h = jax.jit(lambda a, b: sp_scan(a, b, pctx=pctx))(a, b)
+    # oracle: sequential scan
+    href = np.zeros((B, Dst), np.float32)
+    outs = []
+    an, bn = np.asarray(a), np.asarray(b)
+    for t in range(S):
+        href = an[:, t] * href + bn[:, t]
+        outs.append(href.copy())
+    ref = np.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(h), ref, atol=1e-5, rtol=1e-5)
+    print("PASS sp_scan (8-way chunked recurrence)")
+
+
+def check_scan_hybrid():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    pctx = ParallelContext(mesh=mesh, sp_axes=("pod", "model"), layout="contig")
+    B, S, Dst = 2, 32, 4
+    rng = np.random.default_rng(19)
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (B, S, Dst)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, S, Dst)), jnp.float32)
+    h = jax.jit(lambda a, b: sp_scan(a, b, pctx=pctx))(a, b)
+    href = np.zeros((B, Dst), np.float32)
+    outs = []
+    an, bn = np.asarray(a), np.asarray(b)
+    for t in range(S):
+        href = an[:, t] * href + bn[:, t]
+        outs.append(href.copy())
+    np.testing.assert_allclose(np.asarray(h), np.stack(outs, 1), atol=1e-5, rtol=1e-5)
+    print("PASS sp_scan multi-pod (pod x model chunked recurrence)")
+
+
+def check_moe():
+    """a2a expert-parallel dispatch == dense capacity dispatch (fwd + grad)."""
+    from repro.models.config import ArchConfig
+    from repro.models.moe import moe_init, moe_ffn
+
+    cfg = ArchConfig(
+        name="moe-check", family="moe", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab_size=64, n_experts=8,
+        n_experts_per_token=2, moe_d_ff=64, capacity_factor=4.0,  # no drops
+        dtype="float32", param_dtype="float32",
+    )
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(23)
+    B, S = 4, 32
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+
+    dense_pctx = ParallelContext(mesh=None)
+    y_ref, aux_ref = jax.jit(lambda p, x: moe_ffn(p, x, cfg, dense_pctx))(p, x)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    pctx = ParallelContext(mesh=mesh, sp_axes=("model",), impl="xla")
+    y, aux = jax.jit(lambda p, x: moe_ffn(p, x, cfg, pctx))(p, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(float(aux), float(aux_ref), atol=1e-4, rtol=1e-4)
+
+    w = jnp.asarray(rng.standard_normal(y_ref.shape), jnp.float32)
+
+    def loss_a2a(p, x):
+        y, aux = moe_ffn(p, x, cfg, pctx)
+        return jnp.sum(y * w) + aux
+
+    def loss_dense(p, x):
+        y, aux = moe_ffn(p, x, cfg, dense_pctx)
+        return jnp.sum(y * w) + aux
+
+    g1 = jax.jit(jax.grad(loss_a2a))(p, x)
+    g2 = jax.jit(jax.grad(loss_dense))(p, x)
+    for (path, a), (_, b) in zip(
+        jax.tree_util.tree_flatten_with_path(g1)[0],
+        jax.tree_util.tree_flatten_with_path(g2)[0],
+    ):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=3e-4, rtol=3e-4,
+            err_msg=str(path),
+        )
+    print("PASS moe a2a dispatch (fwd + grads vs dense oracle)")
+
+
+def check_sharded_ce():
+    """Vocab-parallel (constrained) CE on a mesh == single-device CE."""
+    from repro.models.layers import chunked_cross_entropy
+
+    rng = np.random.default_rng(29)
+    B, S, d, V = 4, 64, 32, 96
+    x = jnp.asarray(rng.standard_normal((B, S, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d, V)) * 0.05, jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, (B, S)), jnp.float32)
+
+    ref, refn = jax.jit(
+        lambda x, w: chunked_cross_entropy(
+            x, w, labels, mask=mask, chunk=16, compute_dtype=jnp.float32
+        )
+    )(x, w)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    pctx = ParallelContext(mesh=mesh, sp_axes=("model",), impl="xla")
+    got, gotn = jax.jit(
+        lambda x, w: chunked_cross_entropy(
+            x, w, labels, mask=mask, pctx=pctx, compute_dtype=jnp.float32,
+            chunk=16,
+        )
+    )(x, w)
+    np.testing.assert_allclose(float(got), float(ref), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(float(gotn), float(refn))
+
+    g_ref = jax.jit(
+        jax.grad(
+            lambda x, w: chunked_cross_entropy(
+                x, w, labels, mask=mask, chunk=16, compute_dtype=jnp.float32
+            )[0],
+            argnums=(0, 1),
+        )
+    )(x, w)
+    g = jax.jit(
+        jax.grad(
+            lambda x, w: chunked_cross_entropy(
+                x, w, labels, mask=mask, pctx=pctx, compute_dtype=jnp.float32,
+                chunk=16,
+            )[0],
+            argnums=(0, 1),
+        )
+    )(x, w)
+    for a, b, nm in zip(g, g_ref, ["dx", "dw"]):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=3e-5, rtol=3e-5, err_msg=nm
+        )
+    print("PASS sharded vocab-parallel CE (fwd + grads)")
+
+
+def check_travel_dtype():
+    """TokenRing with bf16 accumulator wire: same result within bf16 tol."""
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    q, k, v = _data(Hq=4, Hkv=4, seed=31)
+    S = q.shape[1]
+    ref, _ = attention_reference(q, k, v, causal=True)
+    qz, kz, vz = (to_zigzag(x, 4, axis=1) for x in (q, k, v))
+    pos = _positions(S, 4, "zigzag")
+    pctx = ParallelContext(
+        mesh=mesh, sp_axes=("model",), strategy="tokenring", impl="xla",
+        block_q=64, block_k=64, travel_dtype="bfloat16",
+    )
+    out = jax.jit(
+        lambda q, k, v, p: sp_attention(q, k, v, p, p, pctx=pctx, causal=True)
+    )(qz, kz, vz, pos)
+    err = np.max(np.abs(np.asarray(out, np.float32) - np.asarray(to_zigzag(ref, 4, axis=1))))
+    assert err < 5e-2, err  # bf16 merge rounding, ~P accumulations
+    print(f"PASS tokenring travel_dtype=bf16 (max err {err:.2e} < 5e-2)")
+
+
+CHECKS = {
+    "strategies": check_strategies,
+    "gradients": check_gradients,
+    "hybrid": check_hybrid,
+    "decode": check_decode,
+    "scan": check_scan,
+    "scan_hybrid": check_scan_hybrid,
+    "moe": check_moe,
+    "sharded_ce": check_sharded_ce,
+    "travel": check_travel_dtype,
+}
+
+
+def main(argv):
+    names = argv[1:] or list(CHECKS)
+    assert len(jax.devices()) >= 8, jax.devices()
+    for name in names:
+        CHECKS[name]()
+    print("ALL CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

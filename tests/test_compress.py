@@ -1,0 +1,40 @@
+"""Int8 error-feedback gradient compression: quantizer + single-device EF math.
+
+(The multi-device psum path is covered in repro.testing.distributed_check.)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.compress import dequantize_int8, quantize_int8
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000) * 3.0, jnp.float32)
+    q, s = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) / 2 + 1e-6  # half-ulp rounding bound
+
+
+def test_quantize_zero_safe():
+    q, s = quantize_int8(jnp.zeros(8))
+    assert float(s) == 1.0 and np.all(np.asarray(q) == 0)
+
+
+def test_error_feedback_accumulates_unbiased():
+    """Repeated EF quantization of a constant recovers it on average."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    e = jnp.zeros_like(g)
+    sent_sum = np.zeros(256, np.float32)
+    n = 50
+    for _ in range(n):
+        target = g + e
+        q, s = quantize_int8(target)
+        sent = dequantize_int8(q, s)
+        e = target - sent
+        sent_sum += np.asarray(sent)
+    # total transmitted approaches n*g with bounded residual (EF property)
+    np.testing.assert_allclose(sent_sum / n, np.asarray(g), atol=float(s) / 2 + 1e-5)

@@ -1,0 +1,137 @@
+"""Properties of the online-softmax merge (the paper's Update())."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.merge import (
+    empty_partial,
+    finalize,
+    merge_many,
+    merge_partials,
+    merge_partials_paper_form,
+)
+from repro.kernels.ref import attention_reference, blockwise_reference
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_partial(rng, shape):
+    out = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    lse = jnp.asarray(rng.standard_normal(shape[:-1]) * 3.0, jnp.float32)
+    return out, lse
+
+
+def test_merge_matches_paper_form():
+    rng = np.random.default_rng(0)
+    shape = (2, 8, 4, 16)
+    o1, l1 = _rand_partial(rng, shape)
+    o2, l2 = _rand_partial(rng, shape)
+    out_a, lse_a = merge_partials(o1, l1, o2, l2)
+    out_b, lse_b = merge_partials_paper_form(o1, l1, o2, l2)
+    np.testing.assert_allclose(out_a, out_b, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(lse_a, lse_b, atol=1e-5, rtol=1e-5)
+
+
+def test_merge_identity_element():
+    rng = np.random.default_rng(1)
+    shape = (1, 4, 2, 8)
+    o, l = _rand_partial(rng, shape)
+    eo, el = empty_partial(shape)
+    for a, b in [((o, l), (eo, el)), ((eo, el), (o, l))]:
+        mo, ml = merge_partials(a[0], a[1], b[0], b[1])
+        np.testing.assert_allclose(mo, o, atol=1e-6)
+        np.testing.assert_allclose(ml, l, atol=1e-6)
+
+
+def test_merge_both_empty_is_empty():
+    shape = (1, 4, 2, 8)
+    eo, el = empty_partial(shape)
+    mo, ml = merge_partials(eo, el, eo, el)
+    assert np.all(np.isneginf(np.asarray(ml)))
+    assert np.all(np.asarray(mo) == 0.0)
+    fo, fl = finalize(mo, ml)
+    assert np.all(np.isfinite(np.asarray(fo)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(2, 5),
+    perm_seed=st.integers(0, 2**31 - 1),
+)
+def test_merge_order_invariance(seed, n, perm_seed):
+    """Merging partials in any order gives the same result (comm./assoc.)."""
+    rng = np.random.default_rng(seed)
+    shape = (1, 3, 2, 4)
+    parts = [_rand_partial(rng, shape) for _ in range(n)]
+    ref_o, ref_l = merge_many(parts)
+    order = np.random.default_rng(perm_seed).permutation(n)
+    per_o, per_l = merge_many([parts[i] for i in order])
+    np.testing.assert_allclose(ref_o, per_o, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(ref_l, per_l, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    blocks=st.sampled_from([1, 2, 4, 8]),
+    causal=st.booleans(),
+)
+def test_blockwise_equals_full(seed, blocks, causal):
+    """Blockwise attention + merge == naive full attention (incl. lse)."""
+    rng = np.random.default_rng(seed)
+    B, S, H, D = 1, 32, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    ro, rl = attention_reference(q, k, v, causal=causal)
+    bo, bl = blockwise_reference(q, k, v, block_k=S // blocks, causal=causal)
+    np.testing.assert_allclose(ro, bo, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(rl, bl, atol=2e-5, rtol=2e-5)
+
+
+def test_gqa_reference_matches_repeated_mha():
+    rng = np.random.default_rng(3)
+    B, S, Hq, Hkv, D = 2, 16, 8, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    kk = jnp.repeat(k, Hq // Hkv, axis=2)
+    vv = jnp.repeat(v, Hq // Hkv, axis=2)
+    o1, l1 = attention_reference(q, k, v, causal=True)
+    o2, l2 = attention_reference(q, kk, vv, causal=True)
+    np.testing.assert_allclose(o1, o2, atol=1e-6)
+    np.testing.assert_allclose(l1, l2, atol=1e-6)
+
+
+def test_fully_masked_rows_zero():
+    """q_pos before all k_pos under causal → zero rows, -inf lse."""
+    rng = np.random.default_rng(4)
+    B, S, H, D = 1, 8, 2, 4
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    q_pos = jnp.arange(S, dtype=jnp.int32)  # 0..7
+    k_pos = jnp.arange(S, dtype=jnp.int32) + 100  # all later than any q
+    o, l = attention_reference(q, k, v, causal=True, q_pos=q_pos, k_pos=k_pos)
+    assert np.all(np.asarray(o) == 0.0)
+    assert np.all(np.isneginf(np.asarray(l)))
+
+
+def test_sliding_window_reference():
+    rng = np.random.default_rng(5)
+    B, S, H, D = 1, 32, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    W = 8
+    o, _ = attention_reference(q, k, v, causal=True, window=W)
+    # manual check via bias masking
+    pos = np.arange(S)
+    mask = (pos[:, None] >= pos[None, :]) & (pos[:, None] - pos[None, :] < W)
+    bias = jnp.where(jnp.asarray(mask), 0.0, -1e30)[None, None]
+    o2, _ = attention_reference(q, k, v, causal=False, bias=bias)
+    np.testing.assert_allclose(o, o2, atol=1e-5)
