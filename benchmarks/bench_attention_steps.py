@@ -26,23 +26,31 @@ if __name__ == "__main__":
 PEAK_FLOPS = 197e12
 LINK_BW = 50e9
 
+# table label -> (registered strategy, cost-model extras); per-step bytes are
+# the registered whole-pass comm_cost divided by the (P-1) ring steps, which
+# amortizes TokenRing's going-home hop across the pass.
+STEP_ROWS = {
+    "ring-attention": ("ring", {}),
+    "ring-bidir": ("ring_bidir", {}),
+    "tokenring": ("tokenring", {"travel_dtype": "bfloat16"}),
+}
+
 
 def modeled_step_times(S=24000, Hq=32, Hkv=32, Dh=128, P=4, b=2):
     """Per-ring-step (compute, comm, step) seconds for each strategy."""
+    from repro.core.strategies import get_strategy, strategy_cost
+
     S_loc = S // P
     # per-step block attention flops: q_loc x kv_loc (causal-balanced ~ x0.5)
     flops = 4 * S_loc * S_loc * Hq * Dh * 0.5
     t_comp = flops / PEAK_FLOPS
-    kv = 2 * S_loc * Hkv * Dh * b
-    q = S_loc * Hq * Dh * b
-    out = S_loc * Hq * Dh * b + S_loc * Hq * 4
     res = {}
-    for name, (fwd, bwd) in {
-        "ring-attention": (kv, 0),
-        "ring-bidir": (kv / 2, kv / 2),
-        "tokenring": ((q + out) / 2, (q + out) / 2),
-    }.items():
-        t_comm = max(fwd, bwd) / LINK_BW
+    for name, (strategy, extra) in STEP_ROWS.items():
+        cost = strategy_cost(
+            get_strategy(strategy), 1, S, Hq, Hkv, Dh, P,
+            bytes_per_elem=b, **extra,
+        )
+        t_comm = cost.max_direction / (P - 1) / LINK_BW
         res[name] = (t_comp, t_comm, max(t_comp, t_comm))
     return res
 
@@ -72,6 +80,7 @@ def measure_wallclock():
     import numpy as np
 
     from repro.core import ParallelContext, sp_attention
+    from repro.core.strategies import get_strategy, ineligible_reason, registered_strategies
     from repro.core.zigzag import to_zigzag
 
     mesh = jax.make_mesh((1, 4), ("data", "model"))
@@ -81,7 +90,11 @@ def measure_wallclock():
     pos = to_zigzag(jnp.arange(S, dtype=jnp.int32)[None, :, None], 4, axis=1)[0, :, 0]
     qz = to_zigzag(q, 4, axis=1)
     rows = []
-    for strategy in ["ring", "ring_bidir", "tokenring", "tokenring_faithful"]:
+    runnable = [
+        d.name for d in registered_strategies()
+        if ineligible_reason(d, Hq=Hq, Hkv=Hq, P=4, layout="zigzag") is None
+    ]
+    for strategy in runnable:
         pctx = ParallelContext(
             mesh=mesh, data_axis=None, sp_axes=("model",), strategy=strategy,
             impl="xla", block_q=512, block_k=512,

@@ -5,7 +5,14 @@ the paper's own setting (LLaMA2-7B attention: H=32, d_head=128, MHA) at
 seq 24 000 over 4 devices, plus a GQA column (qwen2-72b: Hq=64, Hkv=8) that
 shows where the auto-chooser flips strategy.
 
-Volumes (per device, per full pass, b = bytes/elem; P devices; S_loc = S/P):
+The SP rows come straight from the registered ``comm_cost`` models
+(``repro.core.strategies``) — the same models the ``"auto"`` planner
+arbitrates with — and :func:`closed_form_volumes` keeps the paper's explicit
+byte arithmetic alongside as an assertion: if a registered model drifts from
+the closed form, ``run()`` (and tests/test_registry.py) fails.
+
+Closed forms (per device, per full pass, b = bytes/elem; P devices;
+S_loc = S/P):
   TP (Megatron)      : 2 all-reduces of (S_loc, d) activations per layer
   Ring Attention     : (P-1) * 2*S_loc*Hkv*Dh*b       one direction
   Ring bidir (ours)  : (P-1) *   S_loc*Hkv*Dh*b       per direction
@@ -16,20 +23,31 @@ Volumes (per device, per full pass, b = bytes/elem; P devices; S_loc = S/P):
 
 from __future__ import annotations
 
+from repro.core.strategies import resolve_strategy, strategy_cost, get_strategy
+
 LINK_BW = 50e9  # bytes/s/direction (v5e ICI)
 
+# (table label, registered strategy, extra cost-model kwargs)
+SP_ROWS = [
+    ("ring-attention", "ring", {}),
+    ("ring-bidir (ours)", "ring_bidir", {}),
+    ("tokenring (bidir, f32 acc)", "tokenring", {"travel_dtype": "float32"}),
+    ("tokenring (bidir, bf16 acc wire)", "tokenring", {"travel_dtype": "bfloat16"}),
+    ("tokenring (faithful, torus)", "tokenring_faithful", {}),
+    ("ulysses (a2a)", "ulysses", {}),
+]
 
-def volumes(S, Hq, Hkv, Dh, P, b=2, d_model=None):
+
+def closed_form_volumes(S, Hq, Hkv, Dh, P, b=2):
+    """The paper's explicit byte arithmetic, kept as the oracle for the
+    registered cost models (fwd-direction bytes, bwd-direction bytes)."""
     S_loc = S // P
-    d = d_model or Hq * Dh
     q = S_loc * Hq * Dh * b
     kv = 2 * S_loc * Hkv * Dh * b
     out = S_loc * Hq * Dh * b  # block_out travels at compute dtype here
     lse = S_loc * Hq * 4
     out_f32 = S_loc * Hq * Dh * 4  # accumulator at fp32 (default wire format)
     rows = {}
-    # (fwd-direction bytes, bwd-direction bytes) per device per layer pass
-    rows["tensor-parallel"] = (2 * S_loc * d * b * (P - 1) / P, 2 * S_loc * d * b * (P - 1) / P)
     rows["ring-attention"] = ((P - 1) * kv, 0.0)
     rows["ring-bidir (ours)"] = ((P - 1) * kv / 2, (P - 1) * kv / 2)
     tr32 = (P - 1) * (q + out_f32 + lse) / 2 + (out_f32 + lse) / 2
@@ -37,9 +55,36 @@ def volumes(S, Hq, Hkv, Dh, P, b=2, d_model=None):
     tr16 = (P - 1) * (q + out + lse) / 2 + (out + lse) / 2
     rows["tokenring (bidir, bf16 acc wire)"] = (tr16, tr16)
     hop_home = sum(i * (out_f32 + lse) for i in range(1, P))
-    rows["tokenring (faithful, torus)"] = ((P - 1) * q, hop_home)
+    rows["tokenring (faithful, torus)"] = ((P - 1) * q, float(hop_home))
     a2a = 4 * S_loc * (Hq + Hkv) / 2 * Dh * b  # q,k,v,out average
     rows["ulysses (a2a)"] = (a2a / 2, a2a / 2)
+    return rows
+
+
+def volumes(S, Hq, Hkv, Dh, P, b=2, d_model=None):
+    """Per-direction bytes per scheme: registry cost models + the TP row,
+    asserted against :func:`closed_form_volumes`."""
+    S_loc = S // P
+    d = d_model or Hq * Dh
+    rows = {}
+    # (fwd-direction bytes, bwd-direction bytes) per device per layer pass
+    rows["tensor-parallel"] = (
+        2 * S_loc * d * b * (P - 1) / P,
+        2 * S_loc * d * b * (P - 1) / P,
+    )
+    for label, name, extra in SP_ROWS:
+        cost = strategy_cost(
+            get_strategy(name), 1, S, Hq, Hkv, Dh, P, bytes_per_elem=b, **extra
+        )
+        rows[label] = (cost.fwd_bytes, cost.bwd_bytes)
+
+    oracle = closed_form_volumes(S, Hq, Hkv, Dh, P, b=b)
+    for label, expect in oracle.items():
+        got = rows[label]
+        assert got == tuple(float(x) for x in expect), (
+            f"registered cost model for {label!r} drifted from the paper's "
+            f"closed form: {got} != {expect}"
+        )
     return rows
 
 
@@ -62,6 +107,8 @@ def table(title, S, Hq, Hkv, Dh, P):
         t = max(f, bwd) / LINK_BW * 1e6
         print(f"| {name} | {f/1e6:.2f} | {bwd/1e6:.2f} | {t:.1f} | {lim[name]} |")
         out.append((name, t))
+    auto = resolve_strategy("auto", S=S, Hq=Hq, Hkv=Hkv, D=Dh, P=P, bytes_per_elem=2)
+    print(f"planner 'auto' choice for this setting: **{auto}**")
     return out
 
 

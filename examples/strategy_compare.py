@@ -1,8 +1,10 @@
 """Compare SP attention strategies: correctness + comm accounting.
 
-Runs every strategy on 8 simulated devices against the same inputs, checks
-they agree, and prints the analytic per-direction communication table that
-drives the auto-chooser (the beyond-paper GQA decision).
+Enumerates the strategy *registry* on 8 simulated devices against the same
+inputs, checks every eligible strategy agrees with the ring baseline, and for
+each one compares the registered ``comm_cost`` model's prediction against the
+bytes *measured* from the compiled HLO's collective ops (the same parser the
+roofline uses) — the paper's byte arithmetic, checked end to end.
 
     PYTHONPATH=src python examples/strategy_compare.py
 """
@@ -17,52 +19,78 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import ParallelContext, choose_strategy, sp_attention  # noqa: E402
+from repro.core import ParallelContext, sp_attention  # noqa: E402
+from repro.core.api import AttnShapes  # noqa: E402
+from repro.core.compat import make_mesh  # noqa: E402
+from repro.core.strategies import (  # noqa: E402
+    ineligible_reason,
+    registered_strategies,
+    resolve_strategy,
+)
 from repro.core.zigzag import to_zigzag  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     B, S, Hq, Hkv, D = 2, 512, 8, 2, 64  # GQA 4:1
+    P_sp = 4
     rng = np.random.default_rng(0)
     q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
-    pos = to_zigzag(jnp.arange(S, dtype=jnp.int32)[None, :, None], 4, axis=1)[0, :, 0]
-    qz, kz, vz = (to_zigzag(x, 4, axis=1) for x in (q, k, v))
+    pos = to_zigzag(jnp.arange(S, dtype=jnp.int32)[None, :, None], P_sp, axis=1)[0, :, 0]
+    qz, kz, vz = (to_zigzag(x, P_sp, axis=1) for x in (q, k, v))
+    shapes = AttnShapes(B=B, Sq=S, Hq=Hq, Hkv=Hkv, D=D, dtype_bytes=4)
+
+    print(f"registry on GQA {Hq}:{Hkv}, S={S}, P={P_sp}, fp32 wire:\n")
+    print("| strategy | predicted fwd/bwd MB | measured fwd/bwd MB | note |")
+    print("|---|---|---|---|")
 
     outs = {}
-    for strategy in ["ring", "ring_bidir", "tokenring", "tokenring_faithful",
-                     "ulysses", "auto"]:
-        if strategy == "ulysses" and Hkv % 4:
-            continue  # the paper's Table-1 head-count limitation, live
+    for desc in registered_strategies():
+        why = ineligible_reason(
+            desc, Hq=Hq, Hkv=Hkv, P=P_sp, layout="zigzag", window=None
+        )
+        if why is not None:
+            print(f"| {desc.name} | - | - | skipped: {why} |")
+            continue
         pctx = ParallelContext(
-            mesh=mesh, sp_axes=("model",), strategy=strategy, impl="xla",
+            mesh=mesh, sp_axes=("model",), strategy=desc.name, impl="xla",
             block_q=64, block_k=64,
         )
-        out = jax.jit(
-            lambda q, k, v, p: sp_attention(q, k, v, p, p, pctx=pctx, causal=True)
-        )(qz, kz, vz, pos)
-        outs[strategy] = np.asarray(out)
-        resolved = choose_strategy(strategy, Hq, Hkv, 4)
-        print(f"{strategy:22s} -> {resolved:12s} out[0,0,0,:3] = "
-              f"{np.asarray(out)[0, 0, 0, :3]}")
+        plan = pctx.plan(shapes, causal=True)
+        fn = jax.jit(
+            lambda q, k, v, p, pctx=pctx: sp_attention(
+                q, k, v, p, p, pctx=pctx, causal=True
+            )
+        )
+        compiled = fn.lower(qz, kz, vz, pos).compile()
+        stats = analyze_hlo(compiled.as_text(), world=8)
+        outs[desc.name] = np.asarray(fn(qz, kz, vz, pos))
+        pc = plan.cost
+        print(
+            f"| {desc.name} | {pc.fwd_bytes/1e6:.3f} / {pc.bwd_bytes/1e6:.3f} "
+            f"| {stats.link_bytes_fwd/1e6:.3f} / {stats.link_bytes_bwd/1e6:.3f} "
+            f"| {desc.description} |"
+        )
 
     ref = outs["ring"]
     for name, o in outs.items():
         np.testing.assert_allclose(o, ref, atol=2e-4, rtol=2e-4, err_msg=name)
-    print("\nall strategies agree; auto-chooser picked "
-          f"'{choose_strategy('auto', Hq, Hkv, 4)}' for GQA {Hq}:{Hkv} "
-          "(KV bytes < Q+out bytes)")
 
-    P = 4
-    S_loc = S // P
-    b = 4
-    print("\nper-direction bytes/step (this config):")
-    print(f"  ring (uni)   : {2*S_loc*Hkv*D*b:>8d} fwd, {0:>8d} bwd")
-    print(f"  ring_bidir   : {S_loc*Hkv*D*b:>8d} fwd, {S_loc*Hkv*D*b:>8d} bwd")
-    print(f"  tokenring    : {S_loc*Hq*D*b:>8d} fwd, {S_loc*Hq*D*b:>8d} bwd")
+    auto = resolve_strategy(
+        "auto", S=S, Hq=Hq, Hkv=Hkv, D=D, P=P_sp, bytes_per_elem=4
+    )
+    print(
+        f"\nall strategies agree; planner picked {auto!r} for GQA {Hq}:{Hkv} "
+        "(KV bytes < Q+out bytes)"
+    )
+    auto_mha = resolve_strategy(
+        "auto", S=S, Hq=Hq, Hkv=Hq, D=D, P=P_sp, bytes_per_elem=4,
+        candidates=("tokenring", "ring", "ring_bidir", "tokenring_faithful"),
+    )
+    print(f"under MHA ({Hq}:{Hq}) the same arbitration picks {auto_mha!r}")
 
 
 if __name__ == "__main__":

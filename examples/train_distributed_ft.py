@@ -22,6 +22,7 @@ import numpy as np  # noqa: E402
 
 from repro.configs import ARCHS  # noqa: E402
 from repro.core.api import ParallelContext  # noqa: E402
+from repro.core.compat import make_mesh  # noqa: E402
 from repro.data.synthetic import SyntheticConfig, SyntheticDataset  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.runtime.fault_tolerance import FailureInjector, FaultTolerantRunner  # noqa: E402
@@ -30,8 +31,7 @@ from repro.sharding import params_shardings  # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     pctx = ParallelContext(
         mesh=mesh, sp_axes=("model",), strategy="tokenring", impl="xla",
         block_q=64, block_k=64,

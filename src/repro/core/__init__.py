@@ -5,9 +5,13 @@ Public surface:
   * sp_decode     — SP decode against a sequence-sharded KV cache
   * sp_scan       — SP diagonal linear recurrence (SSM / RG-LRU substrate)
   * ParallelContext — static distribution descriptor threaded through models
+  * strategy registry — SPStrategy descriptors + comm_cost models behind
+    ``strategy="auto"`` (see core/strategies.py and DESIGN.md)
 """
 
 from repro.core.api import (
+    AttnShapes,
+    ExecutionPlan,
     ParallelContext,
     choose_strategy,
     sp_attention,
@@ -15,9 +19,21 @@ from repro.core.api import (
     sp_scan,
 )
 from repro.core.merge import empty_partial, finalize, merge_many, merge_partials
+from repro.core.strategies import (
+    CommCost,
+    SPStrategy,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+    registered_strategies,
+    resolve_strategy,
+    unregister_strategy,
+)
 
 __all__ = [
     "ParallelContext",
+    "ExecutionPlan",
+    "AttnShapes",
     "choose_strategy",
     "sp_attention",
     "sp_decode",
@@ -26,4 +42,12 @@ __all__ = [
     "merge_many",
     "finalize",
     "empty_partial",
+    "CommCost",
+    "SPStrategy",
+    "register_strategy",
+    "unregister_strategy",
+    "get_strategy",
+    "available_strategies",
+    "registered_strategies",
+    "resolve_strategy",
 ]

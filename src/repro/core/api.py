@@ -8,41 +8,104 @@ strategy runs its explicit ppermute schedule inside, and the result leaves
 with the same sharding — the surrounding ``jit`` (projections, FFN, loss)
 stays in ordinary XLA-SPMD land.
 
-Strategy selection:
+Strategy selection is registry-driven (see ``core/strategies.py`` and
+DESIGN.md): each strategy module registers an ``SPStrategy`` descriptor with
+its capabilities and a closed-form ``comm_cost`` model, and
+:meth:`ParallelContext.plan` resolves the configured name — or ``"auto"`` by
+byte-count argmin over eligible strategies — into an :class:`ExecutionPlan`
+holding the uniform shard_map-local callable.  Built-ins:
+
   * ``"tokenring"``           — paper's method, TPU-adapted (default)
   * ``"tokenring_faithful"``  — paper's Algorithm 1 literal schedule
   * ``"ring"`` / ``"ring_bidir"`` — baselines
   * ``"ulysses"``             — all-to-all head parallelism (head-count bound)
-  * ``"auto"``                — beyond-paper byte-count chooser: TokenRing
-    moves O(Hq·D) per direction per step while bidirectional-KV ring moves
-    O(Hkv·D); under GQA (Hkv << Hq) the KV ring wins, under MHA TokenRing
-    (resident KV, better decode reuse) wins.  The decision is static — it
-    depends only on shapes.
+  * ``"window"``              — halo-exchange sliding-window attention
+  * ``"auto"``                — per-strategy ``comm_cost`` argmin: TokenRing
+    moves O(Hq*D) per direction per step while the bidirectional KV ring moves
+    O(Hkv*D); under GQA (Hkv << Hq) the KV ring wins, and under MHA TokenRing
+    (resident KV, within the KV-residency margin) wins — unless the head
+    counts divide the SP degree at small P, where Ulysses' constant-volume
+    all-to-all is genuinely cheapest (DESIGN.md §2 has the full decision
+    table).  The decision is static — it depends only on shapes.
 
-With two SP axes (multi-pod) every strategy is automatically wrapped in the
-paper's Case-Study-III hybrid: inter-pod KV ring outside, the chosen intra-pod
+With two SP axes (multi-pod) the planner chooses the paper's Case-Study-III
+hybrid decomposition: inter-pod KV ring outside, the chosen intra-pod
 strategy inside.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from functools import partial
+from dataclasses import dataclass
+from typing import Any, Callable
 
-import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.hybrid import hybrid_sp
-from repro.core.recurrence import chunked_linear_recurrence
-from repro.core.ring_attention import ring_attention_bidir_sp, ring_attention_sp
-from repro.core.token_ring import token_ring_sp
-from repro.core.ulysses import ulysses_sp
-from repro.core.decode import sp_decode_attention
-from repro.kernels.ops import flash_attention
+from repro.core.compat import shard_map
+from repro.core.strategies import (
+    CommCost,
+    SPStrategy,
+    get_strategy,
+    ineligible_reason,
+    resolve_strategy,
+    strategy_cost,
+)
 
-__all__ = ["ParallelContext", "sp_attention", "sp_decode", "sp_scan", "choose_strategy"]
+__all__ = [
+    "ParallelContext",
+    "ExecutionPlan",
+    "AttnShapes",
+    "sp_attention",
+    "sp_decode",
+    "sp_scan",
+    "choose_strategy",
+]
+
+
+@dataclass(frozen=True)
+class AttnShapes:
+    """Static attention shapes the planner needs (global, unsharded)."""
+
+    B: int
+    Sq: int
+    Hq: int
+    Hkv: int
+    D: int
+    Sk: int | None = None  # defaults to Sq (self-attention)
+    dtype_bytes: int = 2  # wire size of a q/k/v element
+
+    @property
+    def seq_kv(self) -> int:
+        return self.Sq if self.Sk is None else self.Sk
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """A validated, resolved shard_map execution: what ``sp_attention`` /
+    ``sp_decode`` / ``sp_scan`` actually run.
+
+    ``local_fn`` is the uniform per-shard callable (strategy schedule already
+    bound); ``cost`` is the resolved strategy's modeled per-device link bytes
+    for one forward pass (None for decode/scan plans).
+    """
+
+    kind: str  # "attention" | "decode" | "scan"
+    strategy: str | None  # resolved concrete strategy name
+    inner: str | None  # intra-pod strategy when the hybrid wraps it
+    mesh: Mesh
+    in_specs: tuple
+    out_specs: Any
+    local_fn: Callable[..., Any]
+    sp_axes: tuple[str, ...]
+    sp_degree: int
+    cost: CommCost | None = None
+
+    def __call__(self, *args):
+        fn = shard_map(
+            self.local_fn, mesh=self.mesh, in_specs=self.in_specs,
+            out_specs=self.out_specs, check_vma=False,
+        )
+        return fn(*args)
 
 
 @dataclass(frozen=True)
@@ -62,6 +125,9 @@ class ParallelContext:
     # "bfloat16" halves the per-direction link bytes at ~1e-3 merge rounding
     # (lse always stays fp32).  See benchmarks/bench_comm_volume.py.
     travel_dtype: str = "float32"
+    # Whether the fabric carries both ring directions at full rate (TPU ICI,
+    # NVLink).  False makes the planner score total bytes, not max-direction.
+    bidir_links: bool = True
 
     @property
     def sp_degree(self) -> int:
@@ -82,29 +148,276 @@ class ParallelContext:
             return None
         return self.sp_axes if len(self.sp_axes) > 1 else self.sp_axes[0]
 
+    @property
+    def flat_axis_name(self):
+        """``axis_name`` for collectives over all SP axes jointly: the tuple
+        when there are several, the bare name otherwise."""
+        return self.sp_axes if len(self.sp_axes) > 1 else self.sp_axes[0]
+
+    # -- planning ----------------------------------------------------------
+
+    def _validate_axes(self) -> None:
+        if self.mesh is None:
+            raise ValueError("cannot plan without a mesh")
+        missing = [ax for ax in self.sp_axes if ax not in self.mesh.axis_names]
+        if missing:
+            raise ValueError(
+                f"sp_axes {missing} not in mesh axes {tuple(self.mesh.axis_names)}"
+            )
+        if self.data_axis is not None and self.data_axis not in self.mesh.axis_names:
+            raise ValueError(
+                f"data_axis {self.data_axis!r} not in mesh axes "
+                f"{tuple(self.mesh.axis_names)}"
+            )
+        if not self.sp_axes:
+            raise ValueError("planning requires at least one SP axis")
+
+    def _strategy_kwargs(self, desc: SPStrategy) -> dict:
+        """Extras declared by the descriptor, sourced from this context."""
+        out = {}
+        for name in desc.extra_kwargs:
+            if hasattr(self, name):
+                out[name] = getattr(self, name)
+        return out
+
+    def plan(
+        self,
+        shapes: AttnShapes,
+        *,
+        causal: bool = True,
+        window: int | None = None,
+        scale: float | None = None,
+    ) -> ExecutionPlan:
+        """Validate mesh/axes/layout and resolve the strategy for these
+        shapes, returning the uniform :class:`ExecutionPlan`.
+
+        ``"auto"`` resolves by per-strategy ``comm_cost`` argmin; multi-axis
+        meshes get the Case-Study-III hybrid decomposition (inter-pod KV ring
+        outside, the resolved strategy inside).
+        """
+        self._validate_axes()
+        P_sp = self.sp_degree
+        if shapes.Sq % P_sp or shapes.seq_kv % P_sp:
+            raise ValueError(
+                f"sequence length {shapes.Sq}/{shapes.seq_kv} not divisible "
+                f"by SP degree {P_sp}"
+            )
+        # Cost models are per *device*: the batch dim shards over data.
+        B_loc = shapes.B
+        if self.data_axis is not None:
+            B_loc = max(1, shapes.B // self.mesh.shape[self.data_axis])
+
+        kw = dict(
+            causal=causal, window=window, scale=scale, impl=self.impl,
+            block_q=self.block_q, block_k=self.block_k,
+        )
+
+        hybrid = len(self.sp_axes) >= 2
+        # Eligibility (and cost) for a hybrid plan is judged at the *inner*
+        # ring size: the outer pod axis only circulates KV shards, so e.g.
+        # Ulysses' head-divisibility limit applies to the intra-pod degree.
+        P_elig = self.mesh.shape[self.sp_axes[-1]] if hybrid else P_sp
+        resolve_kw = dict(
+            B=B_loc, S=shapes.Sq, Hq=shapes.Hq, Hkv=shapes.Hkv, D=shapes.D,
+            bytes_per_elem=shapes.dtype_bytes, S_kv=shapes.seq_kv,
+            bidir_links=self.bidir_links, layout=self.layout, window=window,
+        )
+
+        # Windowed layers: only window-capable strategies are meaningful —
+        # circulating the whole sequence for a local window wastes the ring.
+        name = self.strategy
+        if window is not None and (
+            name == "auto" or not get_strategy(name).supports_window
+        ):
+            name = resolve_strategy("auto", P=P_sp, **resolve_kw)
+
+        # A hybrid "auto" arbitrates the *inner* schedule: restrict the pool
+        # to hybrid-capable strategies up front so the cost argmin is never
+        # silently discarded by a post-hoc hybrid_inner_ok fallback.
+        candidates = None
+        if hybrid and name == "auto":
+            from repro.core.strategies import available_strategies
+
+            candidates = tuple(
+                n for n in available_strategies() if get_strategy(n).hybrid_inner_ok
+            )
+        name = resolve_strategy(name, P=P_elig, candidates=candidates, **resolve_kw)
+        desc = get_strategy(name)
+        if desc.supports_window:
+            hybrid = False  # window strategies flatten multi-axis themselves
+
+        dp = self.data_axis
+        seq = self.seq_spec()
+        qspec = P(dp, seq, None, None)
+        pspec = P(dp, seq)
+        in_specs = (qspec, qspec, qspec, pspec, pspec)
+        extras = self._strategy_kwargs(desc)
+
+        if hybrid:
+            # Case Study III: inter-pod KV ring outside, `inner` inside.
+            from repro.core.hybrid import hybrid_sp
+
+            pod_axis, axis_name = self.sp_axes[0], self.sp_axes[1]
+            n_pods = self.mesh.shape[pod_axis]
+            P_inner = self.mesh.shape[axis_name]
+            inner = self.inner_strategy or name
+            inner_desc = get_strategy(inner)
+            if not inner_desc.hybrid_inner_ok:
+                # Same validation depth whether the intent was expressed via
+                # strategy= or inner_strategy= — never silently run a
+                # different schedule than the one configured.
+                raise ValueError(
+                    f"strategy {inner!r} cannot run inside the multi-pod "
+                    f"hybrid; pick a hybrid-capable inner (or strategy="
+                    f"'auto') for multi-axis meshes"
+                )
+            why = ineligible_reason(
+                inner_desc, Hq=shapes.Hq, Hkv=shapes.Hkv, P=P_inner,
+                layout=self.layout, window=window,
+            )
+            if why is not None:
+                raise ValueError(
+                    f"hybrid inner strategy {inner!r} cannot run this config "
+                    f"(intra-pod degree {P_inner}): {why}"
+                )
+            inner_extras = self._strategy_kwargs(inner_desc)
+
+            def local_fn(q, k, v, qp, kp):
+                return hybrid_sp(
+                    q, k, v, qp, kp, pod_axis=pod_axis, axis_name=axis_name,
+                    inner=inner, **kw, **inner_extras,
+                )
+
+            cost = _hybrid_cost(
+                inner_desc, shapes, B_loc=B_loc, n_pods=n_pods,
+                P_inner=P_inner, bidir_links=self.bidir_links,
+                extras=inner_extras,
+            )
+            return ExecutionPlan(
+                kind="attention", strategy=name, inner=inner, mesh=self.mesh,
+                in_specs=in_specs, out_specs=qspec, local_fn=local_fn,
+                sp_axes=self.sp_axes, sp_degree=P_sp, cost=cost,
+            )
+
+        why = ineligible_reason(
+            desc, Hq=shapes.Hq, Hkv=shapes.Hkv, P=P_sp, layout=self.layout,
+            window=window,
+        )
+        if why is not None:
+            raise ValueError(f"strategy {name!r} cannot run this config: {why}")
+
+        # Single flat axis (window strategies flatten multi-axis themselves).
+        axis_name = self.flat_axis_name
+        fn = desc.fn
+
+        def local_fn(q, k, v, qp, kp):
+            return fn(q, k, v, qp, kp, axis_name=axis_name, **kw, **extras)
+
+        cost = strategy_cost(
+            desc, B_loc, shapes.Sq, shapes.Hq, shapes.Hkv, shapes.D, P_sp,
+            bytes_per_elem=shapes.dtype_bytes, bidir_links=self.bidir_links,
+            S_kv=shapes.seq_kv, window=window, **extras,
+        )
+        return ExecutionPlan(
+            kind="attention", strategy=name, inner=None, mesh=self.mesh,
+            in_specs=in_specs, out_specs=qspec, local_fn=local_fn,
+            sp_axes=self.sp_axes, sp_degree=P_sp, cost=cost,
+        )
+
+    def plan_decode(
+        self,
+        *,
+        window: int | None = None,
+        scale: float | None = None,
+    ) -> ExecutionPlan:
+        """Decode plan: tiny replicated Q against the sequence-sharded cache."""
+        from repro.core.decode import sp_decode_attention
+
+        self._validate_axes()
+        dp = self.data_axis
+        seq = self.seq_spec()
+        qspec = P(dp, None, None, None)
+        cspec = P(dp, seq, None, None)
+        axes = self.sp_axes
+
+        def local_fn(q, kc, vc, kp, qp):
+            return sp_decode_attention(
+                q, kc, vc, kp, q_pos=qp, axis_names=axes, causal=True,
+                window=window, scale=scale, impl=self.impl, block_k=self.block_k,
+            )
+
+        return ExecutionPlan(
+            kind="decode", strategy=None, inner=None, mesh=self.mesh,
+            in_specs=(qspec, cspec, cspec, P(dp, seq), P(dp, None)),
+            out_specs=qspec, local_fn=local_fn, sp_axes=self.sp_axes,
+            sp_degree=self.sp_degree,
+        )
+
+    def plan_scan(self, *, ndim: int, axis: int = 1) -> ExecutionPlan:
+        """Sequence-parallel linear-recurrence plan (contiguous layout)."""
+        from repro.core.recurrence import chunked_linear_recurrence
+
+        self._validate_axes()
+        spec_entries = [self.data_axis] + [None] * (ndim - 1)
+        spec_entries[axis] = self.seq_spec()
+        spec = P(*spec_entries)
+        axis_name = self.flat_axis_name
+
+        def local_fn(a, b):
+            return chunked_linear_recurrence(a, b, axis_name=axis_name, axis=axis)
+
+        return ExecutionPlan(
+            kind="scan", strategy=None, inner=None, mesh=self.mesh,
+            in_specs=(spec, spec), out_specs=spec, local_fn=local_fn,
+            sp_axes=self.sp_axes, sp_degree=self.sp_degree,
+        )
+
+
+def _hybrid_cost(
+    inner_desc: SPStrategy,
+    shapes: AttnShapes,
+    *,
+    B_loc: int,
+    n_pods: int,
+    P_inner: int,
+    bidir_links: bool,
+    extras: dict,
+) -> CommCost:
+    """Case-Study-III accounting: every pod step each device forwards its
+    *device-local* KV shard (S_kv / (n_pods * P_inner) rows — see
+    core/hybrid.py) over the slow axis, and runs a full inner pass over the
+    fast axis."""
+    S_kv = shapes.seq_kv
+    kv_shard = (
+        2 * B_loc * (S_kv // (n_pods * P_inner)) * shapes.Hkv * shapes.D
+        * shapes.dtype_bytes
+    )
+    outer = CommCost((n_pods - 1) * kv_shard, 0.0)
+    inner = strategy_cost(
+        inner_desc, B_loc, shapes.Sq // n_pods, shapes.Hq, shapes.Hkv,
+        shapes.D, P_inner, bytes_per_elem=shapes.dtype_bytes,
+        bidir_links=bidir_links, S_kv=S_kv // n_pods, **extras,
+    )
+    return CommCost(
+        outer.fwd_bytes + n_pods * inner.fwd_bytes,
+        outer.bwd_bytes + n_pods * inner.bwd_bytes,
+    )
+
 
 def choose_strategy(strategy: str, Hq: int, Hkv: int, P_sp: int) -> str:
-    """Resolve 'auto' to a concrete strategy from static shape arithmetic."""
+    """Back-compat shim for the pre-registry chooser: arbitrates the ring
+    family (TokenRing vs bidirectional KV ring) from head counts alone by
+    evaluating the registered ``comm_cost`` models at a representative shape.
+    Prefer :func:`repro.core.strategies.resolve_strategy` (full shape/topology
+    arbitration over every registered strategy).
+    """
     if strategy != "auto":
+        get_strategy(strategy)
         return strategy
-    if Hkv < Hq:
-        # GQA/MQA: KV bytes per step (ring_bidir, ∝Hkv) < Q+out (∝Hq).
-        return "ring_bidir"
-    return "tokenring"
-
-
-def _strategy_fn(name: str):
-    if name == "tokenring":
-        return partial(token_ring_sp, variant="bidir")
-    if name == "tokenring_faithful":
-        return partial(token_ring_sp, variant="faithful")
-    if name == "ring":
-        return ring_attention_sp
-    if name == "ring_bidir":
-        return ring_attention_bidir_sp
-    if name == "ulysses":
-        return ulysses_sp
-    raise ValueError(f"unknown SP strategy {name!r}")
+    return resolve_strategy(
+        "auto", S=1024 * max(P_sp, 1), Hq=Hq, Hkv=Hkv, D=128, P=P_sp,
+        bytes_per_elem=2, candidates=("tokenring", "ring_bidir"),
+    )
 
 
 def sp_attention(
@@ -125,6 +438,7 @@ def sp_attention(
     ``k_pos (B,Sk)``/``(Sk,)`` global token positions (already
     layout-permuted, e.g. zigzag; per-batch rows support continuous batching).
     """
+    from repro.kernels.ops import flash_attention
     from repro.kernels.ref import normalize_positions
 
     B, Sq, Hq, D = q.shape
@@ -141,71 +455,12 @@ def sp_attention(
         )
         return out
 
-    strategy = choose_strategy(pctx.strategy, Hq, Hkv, pctx.sp_degree)
-    dp = pctx.data_axis
-    seq = pctx.seq_spec()
-    qspec = P(dp, seq, None, None)
-    pspec = P(dp, seq)
-
-    kw = dict(
-        causal=causal, window=window, scale=scale, impl=pctx.impl,
-        block_q=pctx.block_q, block_k=pctx.block_k,
+    shapes = AttnShapes(
+        B=B, Sq=Sq, Hq=Hq, Hkv=Hkv, D=D, Sk=Sk,
+        dtype_bytes=jnp.dtype(q.dtype).itemsize,
     )
-    tr_kw = dict(kw, travel_dtype=pctx.travel_dtype)
-
-    if window is not None:
-        # Sliding-window layers: halo exchange fetches exactly the needed
-        # neighbor shards instead of circulating the whole sequence
-        # (requires contiguous layout; see core/window.py).
-        from repro.core.window import window_attention_sp
-
-        axis = pctx.sp_axes if len(pctx.sp_axes) > 1 else pctx.sp_axes[0]
-
-        def local_window(q, k, v, qp, kp):
-            kw2 = dict(kw)
-            kw2.pop("window")
-            return window_attention_sp(q, k, v, qp, kp, axis_name=axis, window=window, **kw2)
-
-        shard = jax.shard_map(
-            local_window,
-            mesh=pctx.mesh,
-            in_specs=(qspec, qspec, qspec, pspec, pspec),
-            out_specs=qspec,
-            check_vma=False,
-        )
-        return shard(q, k, v, q_pos, k_pos)
-
-    if len(pctx.sp_axes) >= 2:
-        pod_axis, axis_name = pctx.sp_axes[0], pctx.sp_axes[1]
-        inner = pctx.inner_strategy or strategy
-        if inner.startswith("tokenring_faithful"):
-            inner = "tokenring_faithful"
-        elif inner.startswith("tokenring"):
-            inner = "tokenring"
-
-        def local(q, k, v, qp, kp):
-            return hybrid_sp(
-                q, k, v, qp, kp, pod_axis=pod_axis, axis_name=axis_name,
-                inner=inner if inner in ("tokenring", "tokenring_faithful", "ring", "ulysses") else "tokenring",
-                **kw,
-            )
-
-    else:
-        axis_name = pctx.sp_axes[0]
-        fn = _strategy_fn(strategy)
-        use_kw = tr_kw if strategy.startswith("tokenring") else kw
-
-        def local(q, k, v, qp, kp):
-            return fn(q, k, v, qp, kp, axis_name=axis_name, **use_kw)
-
-    shard = jax.shard_map(
-        local,
-        mesh=pctx.mesh,
-        in_specs=(qspec, qspec, qspec, pspec, pspec),
-        out_specs=qspec,
-        check_vma=False,
-    )
-    return shard(q, k, v, q_pos, k_pos)
+    plan = pctx.plan(shapes, causal=causal, window=window, scale=scale)
+    return plan(q, k, v, q_pos, k_pos)
 
 
 def sp_decode(
@@ -225,6 +480,7 @@ def sp_decode(
     axes on dim 1, ``k_pos (B,Skv)`` (PAD_POS sentinel for unwritten slots),
     ``q_pos (B,Sq)`` — per-request rows support continuous batching.
     """
+    from repro.kernels.ops import flash_attention
     from repro.kernels.ref import normalize_positions
 
     B = q.shape[0]
@@ -238,25 +494,8 @@ def sp_decode(
         )
         return out
 
-    dp = pctx.data_axis
-    seq = pctx.seq_spec()
-    qspec = P(dp, None, None, None)
-    cspec = P(dp, seq, None, None)
-
-    def local(q, kc, vc, kp, qp):
-        return sp_decode_attention(
-            q, kc, vc, kp, q_pos=qp, axis_names=pctx.sp_axes, causal=True,
-            window=window, scale=scale, impl=pctx.impl, block_k=pctx.block_k,
-        )
-
-    shard = jax.shard_map(
-        local,
-        mesh=pctx.mesh,
-        in_specs=(qspec, cspec, cspec, P(dp, seq), P(dp, None)),
-        out_specs=qspec,
-        check_vma=False,
-    )
-    return shard(q, k_cache, v_cache, k_pos, q_pos)
+    plan = pctx.plan_decode(window=window, scale=scale)
+    return plan(q, k_cache, v_cache, k_pos, q_pos)
 
 
 def sp_scan(a, b, *, pctx: ParallelContext, axis: int = 1):
@@ -271,18 +510,5 @@ def sp_scan(a, b, *, pctx: ParallelContext, axis: int = 1):
         h, _ = local_linear_recurrence(a, b, axis=axis)
         return h
 
-    dp = pctx.data_axis
-    seq = pctx.seq_spec()
-    spec_entries = [dp] + [None] * (a.ndim - 1)
-    spec_entries[axis] = seq
-    spec = P(*spec_entries)
-    axis_name = pctx.sp_axes if len(pctx.sp_axes) > 1 else pctx.sp_axes[0]
-
-    def local(a, b):
-        return chunked_linear_recurrence(a, b, axis_name=axis_name, axis=axis)
-
-    shard = jax.shard_map(
-        local, mesh=pctx.mesh, in_specs=(spec, spec), out_specs=spec,
-        check_vma=False,
-    )
-    return shard(a, b)
+    plan = pctx.plan_scan(ndim=a.ndim, axis=axis)
+    return plan(a, b)

@@ -22,23 +22,13 @@ import jax
 from jax import lax
 
 from repro.core.merge import empty_partial, finalize, merge_partials
-from repro.core.ring_attention import ring_attention_sp
-from repro.core.token_ring import token_ring_sp
-from repro.core.ulysses import ulysses_sp
+from repro.core.strategies import get_strategy
 
 __all__ = ["hybrid_sp"]
 
 
 def _ring_perm(P: int, shift: int):
     return [(r, (r + shift) % P) for r in range(P)]
-
-
-_INNER = {
-    "tokenring": lambda **kw: token_ring_sp(variant="bidir", **kw),
-    "tokenring_faithful": lambda **kw: token_ring_sp(variant="faithful", **kw),
-    "ring": ring_attention_sp,
-    "ulysses": ulysses_sp,
-}
 
 
 def hybrid_sp(
@@ -58,16 +48,28 @@ def hybrid_sp(
     block_q: int = 512,
     block_k: int = 512,
     return_lse: bool = False,
+    **inner_kwargs,
 ):
-    """Hybrid SP attention over (pod_axis, axis_name), inside shard_map."""
+    """Hybrid SP attention over (pod_axis, axis_name), inside shard_map.
+
+    ``inner`` names any registered strategy with ``hybrid_inner_ok``;
+    ``inner_kwargs`` are its declared extras (e.g. ``travel_dtype``).
+    """
+    desc = get_strategy(inner)
+    if not desc.hybrid_inner_ok:
+        raise ValueError(
+            f"strategy {inner!r} cannot run inside the Case-Study-III hybrid"
+        )
     n_pods = lax.psum(1, pod_axis)
-    inner_fn = _INNER[inner]
+    inner_fn = desc.fn
+    inner_kwargs = {k: v for k, v in inner_kwargs.items() if k in desc.extra_kwargs}
 
     def inner_pass(k_cur, v_cur, kp_cur):
         return inner_fn(
-            q=q, k=k_cur, v=v_cur, q_pos=q_pos, k_pos=kp_cur,
+            q, k_cur, v_cur, q_pos, kp_cur,
             axis_name=axis_name, causal=causal, window=window, scale=scale,
             impl=impl, block_q=block_q, block_k=block_k, return_lse=True,
+            **inner_kwargs,
         )
 
     out, lse = empty_partial(q.shape)

@@ -26,9 +26,15 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.merge import empty_partial, finalize, merge_partials
+from repro.core.strategies import CommCost, register_strategy
 from repro.kernels.ops import flash_attention
 
-__all__ = ["ring_attention_sp", "ring_attention_bidir_sp"]
+__all__ = [
+    "ring_attention_sp",
+    "ring_attention_bidir_sp",
+    "ring_comm_cost",
+    "ring_bidir_comm_cost",
+]
 
 
 def _ring_perm(P: int, shift: int):
@@ -89,6 +95,27 @@ def ring_attention_sp(
     out, lse = merge_partials(out, lse, o, l)
     out, lse = finalize(out, lse)
     return (out, lse) if return_lse else out
+
+
+def ring_comm_cost(
+    B, S, Hq, Hkv, D, P, *, bytes_per_elem=2, bidir_links=True, S_kv=None, **_,
+):
+    """Classic ring: ``(P-1)`` unidirectional (K, V) shard rotations.
+
+    KV traffic scales with the *KV* sequence (``S_kv``, cross-attention).
+    """
+    S_loc = (S_kv or S) // P
+    kv = 2 * B * S_loc * Hkv * D * bytes_per_elem
+    return CommCost((P - 1) * kv, 0.0)
+
+
+def ring_bidir_comm_cost(
+    B, S, Hq, Hkv, D, P, *, bytes_per_elem=2, bidir_links=True, S_kv=None, **_,
+):
+    """Bidirectional KV ring: half the shard each way, both directions busy."""
+    S_loc = (S_kv or S) // P
+    kv = 2 * B * S_loc * Hkv * D * bytes_per_elem
+    return CommCost((P - 1) * kv / 2, (P - 1) * kv / 2)
 
 
 def ring_attention_bidir_sp(
@@ -153,3 +180,22 @@ def ring_attention_bidir_sp(
     out, lse = merge_partials(out, lse, o, l)
     out, lse = finalize(out, lse)
     return (out, lse) if return_lse else out
+
+
+register_strategy(
+    "ring",
+    ring_attention_sp,
+    comm_cost=ring_comm_cost,
+    description="Ring Attention baseline: KV rotates +1, one link direction",
+)
+
+register_strategy(
+    "ring_bidir",
+    ring_attention_bidir_sp,
+    comm_cost=ring_bidir_comm_cost,
+    # The intra-pod half of the hybrid already has KV arriving from the pod
+    # ring; splitting that transient shard across both directions again is
+    # not implemented (use "ring" or "tokenring" inside).
+    hybrid_inner_ok=False,
+    description="bidirectional-KV ring: half the KV shard each direction",
+)

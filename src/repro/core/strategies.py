@@ -1,0 +1,323 @@
+"""First-class SP strategy registry and the cost-model arbitration behind
+``strategy="auto"``.
+
+The paper's central claim is arithmetic: TokenRing moves ``O(Hq*D)`` bytes per
+direction per ring step while a (bidirectional) KV ring moves ``O(Hkv*D)`` —
+so the right schedule is a function of shapes and topology, not a hardcoded
+branch.  This module makes that arithmetic the API:
+
+  * every strategy module registers an :class:`SPStrategy` descriptor —
+    the shard_map-local callable, declarative capabilities
+    (``supports_window``, ``supports_gqa``, ``requires_layout``,
+    ``hybrid_inner_ok``, accepted extra kwargs such as ``travel_dtype``) and a
+    ``comm_cost`` model implementing its closed-form per-device byte count
+    (the analytic rows of ``benchmarks/bench_comm_volume.py``);
+  * ``ParallelContext.plan`` (``core/api.py``) resolves ``"auto"`` by evaluating
+    every *eligible* registered model and taking the argmin of max-direction
+    bytes, with one documented exception: a ``kv_resident`` schedule wins
+    whenever it is within :data:`KV_RESIDENT_MARGIN` of the cheapest, because
+    resident KV avoids re-streaming K/V in backward remat and keeps the decode
+    cache stationary — value the forward link-byte count cannot see.
+
+Adding a schedule is one module: define the local fn and its cost model, call
+:func:`register_strategy`, and ``sp_attention`` / the planner / the benchmarks
+pick it up with no edits elsewhere.
+
+Cost-model convention — ``comm_cost(B, S, Hq, Hkv, D, P, *, bytes_per_elem=2,
+bidir_links=True, S_kv=None, **extra) -> CommCost`` with per-device bytes for
+one full forward pass of one attention layer; ``S`` is the *global* query
+sequence length, ``S_kv`` the KV sequence when it differs (cross-attention;
+defaults to ``S``), ``extra`` carries strategy-specific knobs named in
+``extra_kwargs`` (e.g. ``travel_dtype``, ``window``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+__all__ = [
+    "CommCost",
+    "SPStrategy",
+    "register_strategy",
+    "unregister_strategy",
+    "get_strategy",
+    "available_strategies",
+    "registered_strategies",
+    "ineligible_reason",
+    "resolve_strategy",
+    "KV_RESIDENT_MARGIN",
+    "LSE_BYTES",
+]
+
+# lse always travels as float32 — 4 bytes per (token, head) scalar.
+LSE_BYTES = 4
+
+# A KV-resident schedule is preferred while its max-direction byte count is
+# within this factor of the cheapest eligible strategy (see module docstring).
+# 1.3 covers TokenRing's lse + going-home overhead over the bidirectional KV
+# ring at MHA for rings of P >= 3 (the overhead vanishes as P grows) while
+# staying far below the >= 2x gap GQA opens in the other direction.
+KV_RESIDENT_MARGIN = 1.3
+
+
+@dataclass(frozen=True)
+class CommCost:
+    """Per-device link bytes of one forward pass, split by ring direction."""
+
+    fwd_bytes: float
+    bwd_bytes: float
+
+    @property
+    def max_direction(self) -> float:
+        return max(self.fwd_bytes, self.bwd_bytes)
+
+    @property
+    def total(self) -> float:
+        return self.fwd_bytes + self.bwd_bytes
+
+    def time_s(self, link_bw: float, *, bidir_links: bool = True) -> float:
+        """Modeled link time: full-duplex fabrics overlap the directions."""
+        bytes_ = self.max_direction if bidir_links else self.total
+        return bytes_ / link_bw
+
+
+@dataclass(frozen=True)
+class SPStrategy:
+    """Descriptor a strategy module registers for itself.
+
+    ``fn`` runs inside ``shard_map`` with the uniform signature
+    ``fn(q, k, v, q_pos, k_pos, *, axis_name, causal, window, scale, impl,
+    block_q, block_k, return_lse=False, **extra)`` where ``extra`` is limited
+    to the names declared in ``extra_kwargs``.
+    """
+
+    name: str
+    fn: Callable[..., Any]
+    comm_cost: Callable[..., CommCost]
+    supports_window: bool = False
+    requires_window: bool = False  # meaningless without a window= argument
+    supports_gqa: bool = True
+    requires_layout: str | None = None  # e.g. "contig"; None = any layout
+    hybrid_inner_ok: bool = True  # usable inside the Case-Study-III hybrid
+    kv_resident: bool = False  # K/V never leave their home device
+    head_divisible: bool = False  # needs Hq % P == 0 and Hkv % P == 0
+    auto_eligible: bool = True  # considered by the "auto" planner
+    extra_kwargs: frozenset[str] = frozenset()
+    description: str = ""
+
+
+_CAPABILITY_FIELDS = frozenset(
+    f.name for f in dataclasses.fields(SPStrategy) if f.name not in ("name", "fn", "comm_cost")
+)
+
+_REGISTRY: dict[str, SPStrategy] = {}
+_BUILTINS_LOADED = False
+
+
+def register_strategy(name: str, fn, *, comm_cost, **capabilities) -> SPStrategy:
+    """Register an SP strategy; raises on duplicate names or unknown keys."""
+    unknown = set(capabilities) - _CAPABILITY_FIELDS
+    if unknown:
+        raise ValueError(
+            f"unknown capability key(s) {sorted(unknown)} for strategy "
+            f"{name!r}; known: {sorted(_CAPABILITY_FIELDS)}"
+        )
+    if name in _REGISTRY:
+        raise ValueError(f"SP strategy {name!r} is already registered")
+    if not callable(fn) or not callable(comm_cost):
+        raise ValueError(f"strategy {name!r}: fn and comm_cost must be callable")
+    extra = capabilities.pop("extra_kwargs", frozenset())
+    desc = SPStrategy(
+        name=name, fn=fn, comm_cost=comm_cost,
+        extra_kwargs=frozenset(extra), **capabilities,
+    )
+    _REGISTRY[name] = desc
+    return desc
+
+
+def unregister_strategy(name: str) -> None:
+    """Remove a strategy (tests / plugin reload); missing names are a no-op."""
+    _REGISTRY.pop(name, None)
+
+
+def _ensure_builtins() -> None:
+    """Import the built-in strategy modules so they self-register.
+
+    Lazy so that registry order never depends on which ``repro.core``
+    submodule a consumer happened to import first.
+    """
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
+    _BUILTINS_LOADED = True
+    import repro.core.ring_attention  # noqa: F401
+    import repro.core.token_ring  # noqa: F401
+    import repro.core.ulysses  # noqa: F401
+    import repro.core.window  # noqa: F401
+
+
+def get_strategy(name: str) -> SPStrategy:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown SP strategy {name!r}; registered: {available_strategies()}"
+        ) from None
+
+
+def available_strategies() -> tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def registered_strategies() -> tuple[SPStrategy, ...]:
+    _ensure_builtins()
+    return tuple(_REGISTRY[n] for n in sorted(_REGISTRY))
+
+
+def ineligible_reason(
+    desc: SPStrategy,
+    *,
+    Hq: int,
+    Hkv: int,
+    P: int,
+    layout: str | None = None,
+    window: int | None = None,
+) -> str | None:
+    """Why ``desc`` cannot run this shape/config, or None if it can."""
+    if window is not None and not desc.supports_window:
+        return "does not implement sliding-window attention"
+    if window is None and desc.requires_window:
+        return "only implements sliding-window attention (needs window=)"
+    if Hkv != Hq and not desc.supports_gqa:
+        return f"no GQA support (Hq={Hq}, Hkv={Hkv})"
+    if desc.head_divisible and (Hq % P or Hkv % P):
+        return (
+            f"needs head counts divisible by the SP degree "
+            f"(Hq={Hq}, Hkv={Hkv}, P={P})"
+        )
+    if desc.requires_layout and layout and layout != desc.requires_layout:
+        return f"requires layout={desc.requires_layout!r}, got {layout!r}"
+    return None
+
+
+def _decision_travel_dtype(bytes_per_elem: int) -> str:
+    # Schedule arbitration evaluates traveling accumulators at compute
+    # precision: the wire format (``travel_dtype``) is an orthogonal knob and
+    # must not flip which *schedule* is communication-optimal.
+    return {1: "float8_e4m3fn", 2: "bfloat16", 4: "float32"}.get(
+        bytes_per_elem, "float32"
+    )
+
+
+def strategy_cost(
+    desc: SPStrategy,
+    B: int,
+    S: int,
+    Hq: int,
+    Hkv: int,
+    D: int,
+    P: int,
+    *,
+    bytes_per_elem: int = 2,
+    bidir_links: bool = True,
+    S_kv: int | None = None,
+    **extra,
+) -> CommCost:
+    """Evaluate a descriptor's cost model, passing only its declared extras."""
+    kw = {k: v for k, v in extra.items() if k in desc.extra_kwargs}
+    return desc.comm_cost(
+        B, S, Hq, Hkv, D, P, bytes_per_elem=bytes_per_elem,
+        bidir_links=bidir_links, S_kv=S_kv, **kw,
+    )
+
+
+def resolve_strategy(
+    name: str,
+    *,
+    B: int = 1,
+    S: int,
+    Hq: int,
+    Hkv: int,
+    D: int,
+    P: int,
+    bytes_per_elem: int = 2,
+    bidir_links: bool = True,
+    S_kv: int | None = None,
+    layout: str | None = None,
+    window: int | None = None,
+    candidates: tuple[str, ...] | None = None,
+) -> str:
+    """Resolve ``"auto"`` to the concrete registered strategy with the least
+    modeled link time; explicit names are validated and returned unchanged.
+
+    The argmin runs over eligible, ``auto_eligible`` strategies using each
+    model's max-direction bytes (or total bytes on half-duplex fabrics), with
+    the KV-residency margin described in the module docstring.
+    """
+    if name != "auto":
+        get_strategy(name)  # raise early on unknown names
+        return name
+
+    _ensure_builtins()
+    pool = candidates if candidates is not None else available_strategies()
+    extra = {"travel_dtype": _decision_travel_dtype(bytes_per_elem)}
+    if window is not None:
+        extra["window"] = window
+
+    scored: list[tuple[float, SPStrategy]] = []
+    reasons: dict[str, str] = {}
+    for n in pool:
+        desc = get_strategy(n)
+        if not desc.auto_eligible:
+            reasons[n] = "not auto-eligible"
+            continue
+        why = ineligible_reason(
+            desc, Hq=Hq, Hkv=Hkv, P=P, layout=layout, window=window
+        )
+        if why is not None:
+            reasons[n] = why
+            continue
+        cost = strategy_cost(
+            desc, B, S, Hq, Hkv, D, P,
+            bytes_per_elem=bytes_per_elem, bidir_links=bidir_links,
+            S_kv=S_kv, **extra,
+        )
+        score = cost.max_direction if bidir_links else cost.total
+        scored.append((score, desc))
+    if not scored:
+        raise ValueError(
+            f"no eligible SP strategy for Hq={Hq}, Hkv={Hkv}, P={P}, "
+            f"window={window}, layout={layout}: {reasons}"
+        )
+    scored.sort(key=lambda t: (t[0], t[1].name))
+    best_score = scored[0][0]
+    for score, desc in scored:
+        if desc.kv_resident and score <= KV_RESIDENT_MARGIN * best_score:
+            return desc.name
+    return scored[0][1].name
+
+
+# ---------------------------------------------------------------------------
+# shared closed-form helpers used by the built-in cost models
+
+
+def mean_ring_hops(P: int) -> float:
+    """Mean neighbor-hop distance between distinct ranks on a bidirectional
+    1-D torus of size P (relevant for modeling far sends / all-to-alls)."""
+    if P <= 1:
+        return 0.0
+    return sum(min(d, P - d) for d in range(1, P)) / (P - 1)
+
+
+def itemsize(dtype_like) -> int:
+    import jax.numpy as jnp
+
+    return jnp.dtype(dtype_like).itemsize
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)

@@ -37,10 +37,13 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from functools import partial
+
 from repro.core.merge import empty_partial, finalize, merge_partials
+from repro.core.strategies import CommCost, LSE_BYTES, itemsize, register_strategy
 from repro.kernels.ops import flash_attention
 
-__all__ = ["token_ring_sp"]
+__all__ = ["token_ring_sp", "token_ring_comm_cost", "token_ring_faithful_comm_cost"]
 
 
 def _ring_perm(P: int, shift: int):
@@ -184,3 +187,54 @@ def token_ring_sp(
     else:
         raise ValueError(f"unknown token_ring variant: {variant!r}")
     return (out, lse) if return_lse else out
+
+
+def token_ring_comm_cost(
+    B, S, Hq, Hkv, D, P, *, bytes_per_elem=2, bidir_links=True,
+    travel_dtype="float32", **_,
+):
+    """Split-Q bidirectional co-rotation, per device per direction:
+    ``(P-1) * (S_loc/2) * (Q + out + lse)`` stepwise + the going-home hop.
+
+    Q travels at ``bytes_per_elem``; the ``out`` accumulator at
+    ``travel_dtype``; lse always float32.
+    """
+    if P <= 1:
+        return CommCost(0.0, 0.0)
+    S_loc = S // P
+    q = B * S_loc * Hq * D * bytes_per_elem
+    out = B * S_loc * Hq * D * itemsize(travel_dtype)
+    lse = B * S_loc * Hq * LSE_BYTES
+    per_dir = (P - 1) * (q + out + lse) / 2 + (out + lse) / 2
+    return CommCost(per_dir, per_dir)
+
+
+def token_ring_faithful_comm_cost(
+    B, S, Hq, Hkv, D, P, *, bytes_per_elem=2, bidir_links=True, **_,
+):
+    """Algorithm 1 on a torus: forward Q stream plus distance-``i`` homeward
+    partial sends whose hop-bytes sum to ``O(P^2)`` (accumulator at fp32)."""
+    S_loc = S // P
+    q = B * S_loc * Hq * D * bytes_per_elem
+    out_f32 = B * S_loc * Hq * D * 4
+    lse = B * S_loc * Hq * LSE_BYTES
+    hop_home = sum(i * (out_f32 + lse) for i in range(1, P))
+    return CommCost((P - 1) * q, float(hop_home))
+
+
+register_strategy(
+    "tokenring",
+    partial(token_ring_sp, variant="bidir"),
+    comm_cost=token_ring_comm_cost,
+    kv_resident=True,
+    extra_kwargs={"travel_dtype"},
+    description="paper's method, TPU-adapted: split-Q bidirectional co-rotation",
+)
+
+register_strategy(
+    "tokenring_faithful",
+    partial(token_ring_sp, variant="faithful"),
+    comm_cost=token_ring_faithful_comm_cost,
+    kv_resident=True,
+    description="paper's Algorithm 1 literal schedule (far homeward sends)",
+)

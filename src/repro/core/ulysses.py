@@ -20,9 +20,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.strategies import CommCost, register_strategy
 from repro.kernels.ops import flash_attention
 
-__all__ = ["ulysses_sp"]
+__all__ = ["ulysses_sp", "ulysses_comm_cost"]
 
 
 def ulysses_sp(
@@ -75,3 +76,26 @@ def ulysses_sp(
     # lse: (B, S, Hq/P) head-sharded -> back to seq-sharded (B, S_loc, Hq).
     lse = lax.all_to_all(lse[..., None], axis_name, split_axis=1, concat_axis=2, tiled=True)[..., 0]
     return out, lse
+
+
+def ulysses_comm_cost(
+    B, S, Hq, Hkv, D, P, *, bytes_per_elem=2, bidir_links=True, S_kv=None, **_,
+):
+    """Four all-to-alls (q, k, v in; out back), volume constant in P.
+
+    q and out move ``S`` rows of ``Hq`` heads; k and v move ``S_kv`` rows of
+    ``Hkv`` heads (equal to the self-attention closed form when S_kv == S).
+    """
+    Sq_loc = S // P
+    Skv_loc = (S_kv or S) // P
+    a2a = 2 * B * (Sq_loc * Hq + Skv_loc * Hkv) * D * bytes_per_elem
+    return CommCost(a2a / 2, a2a / 2)
+
+
+register_strategy(
+    "ulysses",
+    ulysses_sp,
+    comm_cost=ulysses_comm_cost,
+    head_divisible=True,  # the paper's Table-1 limitation: SP degree <= heads
+    description="DeepSpeed-Ulysses all-to-all head parallelism",
+)

@@ -16,9 +16,10 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.collectives import flat_ring_shift, flat_size
+from repro.core.strategies import CommCost, ceil_div, register_strategy
 from repro.kernels.ops import flash_attention
 
-__all__ = ["window_attention_sp"]
+__all__ = ["window_attention_sp", "window_comm_cost"]
 
 
 def window_attention_sp(
@@ -59,3 +60,30 @@ def window_attention_sp(
         window=window, scale=scale, impl=impl, block_q=block_q, block_k=block_k,
     )
     return (out, lse) if return_lse else out
+
+
+def window_comm_cost(
+    B, S, Hq, Hkv, D, P, *, bytes_per_elem=2, bidir_links=True, window=None,
+    S_kv=None, **_,
+):
+    """Halo fetch: ``ceil((W-1)/S_loc)`` predecessor (K, V) shards, one
+    direction, independent of P once the halo is smaller than the ring."""
+    S_loc = (S_kv or S) // P
+    if not window:
+        return CommCost(0.0, 0.0)
+    halo = min(P - 1, ceil_div(window - 1, S_loc))
+    kv = 2 * B * S_loc * Hkv * D * bytes_per_elem
+    return CommCost(halo * kv, 0.0)
+
+
+register_strategy(
+    "window",
+    window_attention_sp,
+    comm_cost=window_comm_cost,
+    supports_window=True,
+    requires_window=True,
+    requires_layout="contig",  # halo semantics assume contiguous shards
+    hybrid_inner_ok=False,  # handles multi-axis itself via flat ring shifts
+    extra_kwargs={"window"},  # the cost model needs the window size
+    description="halo-exchange sliding-window attention (local layers)",
+)

@@ -208,6 +208,32 @@ def run_cell(arch, shape_name, *, multi_pod, strategy, out_dir, force=False,
             for x in jax.tree.leaves(state_specs)
         )
 
+    # Planner view of the attention layer for this cell: resolved strategy
+    # (auto goes through the registered comm_cost models) and predicted
+    # per-device link bytes, recorded next to the measured HLO stats.
+    plan_info = None
+    if kind != "decode" and pctx.active and cfg.family != "ssm":
+        try:
+            from repro.core.api import AttnShapes
+
+            plan = pctx.plan(
+                AttnShapes(
+                    B=shape.global_batch, Sq=shape.seq_len, Hq=cfg.n_heads,
+                    Hkv=cfg.n_kv_heads, D=cfg.head_dim,
+                    dtype_bytes=jnp.dtype(cfg.dtype).itemsize,
+                ),
+                causal=cfg.causal,
+                window=cfg.window,
+            )
+            plan_info = {
+                "strategy": plan.strategy,
+                "inner": plan.inner,
+                "predicted_link_bytes_fwd": plan.cost.fwd_bytes,
+                "predicted_link_bytes_bwd": plan.cost.bwd_bytes,
+            }
+        except ValueError as e:
+            plan_info = {"error": str(e)}
+
     t_lower = time.time() - t0
     compiled = lowered.compile()
     t_compile = time.time() - t0 - t_lower
@@ -246,6 +272,7 @@ def run_cell(arch, shape_name, *, multi_pod, strategy, out_dir, force=False,
         "mesh": mesh_tag,
         "mesh_shape": dict(mesh.shape),
         "strategy": strategy,
+        "plan": plan_info,
         "layout": cfg.layout,
         "kind": kind,
         "status": "ok",

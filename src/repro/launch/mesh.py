@@ -10,10 +10,8 @@ Defined as functions so importing this module never touches jax device state.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
-
 from repro.core.api import ParallelContext
+from repro.core.compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_pctx", "SINGLE_POD_SHAPE", "MULTI_POD_SHAPE"]
 
@@ -24,7 +22,7 @@ MULTI_POD_SHAPE = (2, 16, 16)
 def make_production_mesh(*, multi_pod: bool = False):
     shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_pctx(

@@ -19,6 +19,7 @@ import jax
 
 from repro.configs import ARCHS
 from repro.core.api import ParallelContext
+from repro.core.strategies import available_strategies, get_strategy
 from repro.data.synthetic import SyntheticConfig, SyntheticDataset
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig
@@ -40,7 +41,15 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fail-at", type=int, default=None,
                     help="inject a failure at this step (fault-tolerance demo)")
-    ap.add_argument("--strategy", default="tokenring")
+    ap.add_argument(
+        "--strategy", default="tokenring",
+        # window-only strategies need a window= the full-attention layers
+        # of a training run never pass; don't advertise them here
+        choices=["auto"] + [
+            n for n in available_strategies()
+            if not get_strategy(n).requires_window
+        ],
+    )
     args = ap.parse_args(argv)
 
     cfg = ARCHS[args.arch]

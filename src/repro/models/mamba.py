@@ -28,6 +28,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.api import ParallelContext
+from repro.core.compat import shard_map
 from repro.core.recurrence import device_exclusive_scan
 from repro.models.layers import apply_norm, dense, dense_init, norm_init
 
@@ -205,7 +206,7 @@ def selective_scan_sp(x_c, dt_in, Bs, Cs, dt_w, dt_b, A, D, *, pctx: ParallelCon
         y, _ = _selective_scan_local(x_c, dt, Bs, Cs, A, D, h_in, chunk)
         return y
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=pctx.mesh,
         in_specs=(act, act, act, act, P(None, None), P(None), P(None, None), P(None)),

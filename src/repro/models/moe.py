@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.compat import shard_map
+
 from repro.models.layers import dense_init, mlp, mlp_init
 
 __all__ = ["moe_init", "moe_ffn"]
@@ -285,7 +287,7 @@ def _moe_ffn_a2a(p, x, cfg, pctx):
         aux = E * jnp.sum(importance * assigned) / K
         return y.astype(dt), aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=pctx.mesh,
         in_specs=(act, rspec, espec, espec, espec),
@@ -364,7 +366,7 @@ def _moe_ffn_replicated_seq(p, x, cfg, pctx):
         # replicate over any SP axis not used for EP (pod when E < world)
         return y.astype(dt), jnp.float32(0.0)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=pctx.mesh,
         in_specs=(act, P_(None, None), espec, espec, espec),

@@ -18,7 +18,9 @@ from __future__ import annotations
 import numpy as np
 
 import jax
-from jax.sharding import AxisType, Mesh, NamedSharding
+from jax.sharding import Mesh, NamedSharding
+
+from repro.core.compat import device_mesh
 
 __all__ = ["shrink_mesh", "reshard", "ElasticState"]
 
@@ -31,7 +33,7 @@ def shrink_mesh(devices, *, model_axis: int, axis_names=("data", "model")):
         model //= 2
     data = n // model
     devs = np.asarray(devices[: data * model]).reshape(data, model)
-    return Mesh(devs, axis_names, axis_types=(AxisType.Auto,) * len(axis_names))
+    return device_mesh(devs, axis_names)
 
 
 def reshard(tree, shardings):

@@ -19,6 +19,8 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.core.compat import shard_map  # noqa: E402
+
 
 def check_compressed_psum():
     from repro.optim.compress import compressed_psum_ef, init_error_feedback
@@ -35,7 +37,7 @@ def check_compressed_psum():
         return out["w"][None], new_e["w"][None]
 
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             local, mesh=mesh, in_specs=(P("data"), P("data")),
             out_specs=(P("data"), P("data")), check_vma=False,
         )

@@ -19,7 +19,9 @@ os.environ["XLA_FLAGS"] = (
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core.compat import make_mesh  # noqa: E402
 
 from repro.configs import ARCHS  # noqa: E402
 from repro.core.api import ParallelContext  # noqa: E402
@@ -32,7 +34,7 @@ from repro.sharding.rules import batch_shardings, params_shardings  # noqa: E402
 
 
 def _mesh():
-    return jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((2, 4), ("data", "model"))
 
 
 def _compile(strategy):

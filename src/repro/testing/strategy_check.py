@@ -52,14 +52,17 @@ def _positions(S, P_sp, layout):
 
 
 def check_strategies():
+    from repro.core.strategies import ineligible_reason, registered_strategies
+
     mesh = jax.make_mesh((2, 4), ("data", "model"))
-    for strategy in ["ring", "ring_bidir", "tokenring", "tokenring_faithful", "ulysses"]:
+    for desc in registered_strategies():
         for layout, causal, (Hq, Hkv) in [
             ("zigzag", True, (4, 4)),
             ("zigzag", True, (8, 4)),
             ("contig", False, (4, 4)),
         ]:
-            if strategy == "ulysses" and Hkv % 4:
+            strategy = desc.name
+            if ineligible_reason(desc, Hq=Hq, Hkv=Hkv, P=4, layout=layout) is not None:
                 continue
             pctx = ParallelContext(
                 mesh=mesh, sp_axes=("model",), strategy=strategy,
@@ -117,7 +120,9 @@ def check_gradients():
 
 def check_hybrid():
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-    for inner in ["tokenring", "ring"]:
+    # ulysses as hybrid inner: head divisibility is judged at the intra-pod
+    # degree (2), not the total SP degree (4) — Hkv=2 % 2 == 0 is legal.
+    for inner in ["tokenring", "ring", "ulysses"]:
         pctx = ParallelContext(
             mesh=mesh, sp_axes=("pod", "model"), strategy="tokenring",
             inner_strategy=inner, impl="xla", block_q=32, block_k=32,
@@ -320,8 +325,102 @@ def check_travel_dtype():
     print(f"PASS tokenring travel_dtype=bf16 (max err {err:.2e} < 5e-2)")
 
 
+def check_window():
+    """Halo-exchange window strategy == windowed single-device oracle, and
+    the planner routes windowed layers to it from any configured strategy."""
+    from repro.core.api import AttnShapes
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    B, S, Hq, Hkv, D, W = 2, 256, 4, 2, 32, 96
+    rng = np.random.default_rng(37)
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    ref, _ = attention_reference(q, k, v, causal=True, window=W)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    for strategy in ["tokenring", "auto"]:
+        pctx = ParallelContext(
+            mesh=mesh, sp_axes=("model",), strategy=strategy, layout="contig",
+            impl="xla", block_q=64, block_k=64,
+        )
+        plan = pctx.plan(
+            AttnShapes(B=B, Sq=S, Hq=Hq, Hkv=Hkv, D=D, dtype_bytes=4),
+            causal=True, window=W,
+        )
+        assert plan.strategy == "window", plan.strategy
+        assert plan.cost.fwd_bytes > 0 and plan.cost.bwd_bytes == 0
+        out = jax.jit(
+            lambda q, k, v, p: sp_attention(
+                q, k, v, p, p, pctx=pctx, causal=True, window=W
+            )
+        )(q, k, v, pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+        print(f"PASS window halo-exchange (planned from strategy={strategy})")
+
+
+def check_registry_plugin():
+    """A strategy registered from *outside* core runs through sp_attention
+    with no edits to the API — the registry's extensibility contract."""
+    from repro.core.merge import finalize
+    from repro.core.strategies import (
+        CommCost,
+        register_strategy,
+        unregister_strategy,
+    )
+    from repro.kernels.ops import flash_attention
+
+    def allgather_sp(
+        q, k, v, q_pos, k_pos, *, axis_name, causal=False, window=None,
+        scale=None, impl="auto", block_q=512, block_k=512, return_lse=False,
+    ):
+        # Naive baseline: gather every KV shard and attend locally.
+        k_all = jax.lax.all_gather(k, axis_name, axis=1, tiled=True)
+        v_all = jax.lax.all_gather(v, axis_name, axis=1, tiled=True)
+        kp_all = jax.lax.all_gather(k_pos, axis_name, axis=1, tiled=True)
+        out, lse = flash_attention(
+            q, k_all, v_all, q_pos=q_pos, k_pos=kp_all, causal=causal,
+            window=window, scale=scale, impl=impl, block_q=block_q,
+            block_k=block_k,
+        )
+        out, lse = finalize(out, lse)
+        return (out, lse) if return_lse else out
+
+    def allgather_cost(B, S, Hq, Hkv, D, P, *, bytes_per_elem=2, **_):
+        # bidirectional ring all-gather: (P-1)/P of the KV bytes, half each way
+        kv = 2 * B * (S // P) * Hkv * D * bytes_per_elem * (P - 1)
+        return CommCost(kv / 2, kv / 2)
+
+    register_strategy(
+        "toy_allgather", allgather_sp, comm_cost=allgather_cost,
+        auto_eligible=False,
+        description="toy plugin: all-gather KV, attend locally",
+    )
+    try:
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        pctx = ParallelContext(
+            mesh=mesh, sp_axes=("model",), strategy="toy_allgather",
+            impl="xla", block_q=64, block_k=64,
+        )
+        q, k, v = _data(Hq=8, Hkv=2, seed=41)
+        S = q.shape[1]
+        ref, _ = attention_reference(q, k, v, causal=True)
+        qz, kz, vz = (_layout(x, 4, "zigzag") for x in (q, k, v))
+        pos = _positions(S, 4, "zigzag")
+        out = jax.jit(
+            lambda q, k, v, p: sp_attention(q, k, v, p, p, pctx=pctx, causal=True)
+        )(qz, kz, vz, pos)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(to_zigzag(ref, 4, axis=1)), **TOL
+        )
+    finally:
+        unregister_strategy("toy_allgather")
+    print("PASS registry plugin (toy strategy through sp_attention)")
+
+
 CHECKS = {
     "strategies": check_strategies,
+    "window": check_window,
+    "registry": check_registry_plugin,
     "gradients": check_gradients,
     "hybrid": check_hybrid,
     "decode": check_decode,

@@ -48,6 +48,13 @@ def test_strategy_gradients():
 
 
 @pytest.mark.slow
+def test_window_and_registry_plugin():
+    """Halo-exchange window planning + a toy strategy registered from outside
+    core running through sp_attention (the registry extensibility contract)."""
+    _run_check("repro.testing.strategy_check", "window", "registry")
+
+
+@pytest.mark.slow
 def test_hybrid_multipod_and_decode():
     _run_check("repro.testing.strategy_check", "hybrid", "decode")
 
