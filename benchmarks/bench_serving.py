@@ -1,0 +1,162 @@
+"""Serving benchmark: chunked prefill TTFT / decode throughput + the
+planner's per-schedule link-byte table.
+
+Two sections:
+
+  * **measured** (reduced model, CPU): the continuous-batching engine serves
+    a long prompt while short requests decode.  The chunk-size sweep shows
+    prefill step count dropping from ``O(prompt)`` (token-by-token, chunk=1)
+    to ``O(prompt/chunk)``, with TTFT and decode tokens/s alongside.
+  * **modeled** (planner cost models): per-schedule link bytes for a
+    production GQA shape — the registered ``decode`` / ``prefill``
+    (cache-resident psum) rows against what circulating schedules
+    (ring / ring_bidir / tokenring) would move for the same prompt if the
+    sharded cache were rotated every chunk.  These are the same ``comm_cost``
+    models ``plan_decode`` / ``plan_prefill`` attach to real plans.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_serving``
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.strategies import get_strategy, strategy_cost
+
+LINK_BW = 50e9  # bytes/s/direction (v5e ICI)
+
+
+def measured(chunks=(1, 8, 32), prompt_len=96, max_new=8):
+    import jax
+    import numpy as np
+
+    from repro.configs import ARCHS
+    from repro.core.api import ParallelContext
+    from repro.models import build_model
+    from repro.serving.engine import ServingEngine
+
+    cfg = ARCHS["qwen3-1.7b"].reduced(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_head=32, d_ff=128,
+        vocab_size=97,
+    )
+    bundle = build_model(cfg, ParallelContext(mesh=None, impl="xla"))
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    long_prompt = rng.integers(1, cfg.vocab_size, prompt_len)
+
+    print(f"\n### measured: {prompt_len}-token prompt + 2 decode streams "
+          f"(reduced {cfg.name}, CPU)")
+    print("| prefill chunk | prefill steps | decode steps | ttft (ms) | decode tok/s |")
+    print("|---|---|---|---|---|")
+    rows = []
+    for chunk in chunks:
+        eng = ServingEngine(
+            bundle, params, max_batch=3, max_len=2 * prompt_len,
+            prefill_chunk=chunk,
+        )
+        # two short decode streams keep the batch busy during the prefill
+        eng.submit([3, 9], max_new_tokens=max_new)
+        eng.submit([5, 11], max_new_tokens=max_new)
+        req = eng.submit(long_prompt, max_new_tokens=max_new)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        s = eng.stats()
+        ttft = (req.t_first - req.t_submit) * 1e3
+        tps = s["tokens"] / dt
+        print(f"| {chunk} | {s['prefill_steps']} | {s['decode_steps']} "
+              f"| {ttft:.0f} | {tps:.1f} |")
+        expect_steps = -(-(prompt_len - 1) // chunk)
+        assert s["prefill_steps"] == expect_steps, (
+            f"chunk={chunk}: {s['prefill_steps']} prefill steps, "
+            f"expected ceil({prompt_len - 1}/{chunk}) = {expect_steps}"
+        )
+        rows.append((f"serving/chunk{chunk}/ttft", ttft * 1e3, "us"))
+        rows.append((f"serving/chunk{chunk}/decode_tps", tps, "tok/s"))
+    print(f"(prefill steps = ceil({prompt_len - 1}/chunk): O(prompt/chunk), "
+          f"not the O(prompt) decode steps of token-by-token filling)")
+    return rows
+
+
+def modeled(B=1, prompt=32768, chunk=256, Hq=64, Hkv=8, D=128, P=4, b=2):
+    """Planner link bytes per schedule for one attention layer's serving.
+
+    The decode row is bytes per generated token (``B*Hq*(D+2)`` fp32 scalars
+    through a ``(P-1)/P`` ring all-reduce — context-length independent).
+    The prefill rows are bytes for the *whole prompt*: the cache-resident
+    schedule psums each chunk's ``(out, lse)`` partials (``O(prompt)``
+    total), while a circulating schedule re-moves data every chunk — KV rings
+    rotate the already-filled cache (chunk ``i`` sees ``i*chunk`` rows; the
+    models are linear in ``S_kv``, so the series sums exactly), TokenRing
+    re-circulates each chunk's Q + accumulators for ``n_chunks`` passes.
+    """
+    print(f"\n### modeled: GQA serving shape Hq={Hq} Hkv={Hkv} D={D} "
+          f"P={P}, prompt {prompt} in {chunk}-token chunks")
+    dec = strategy_cost(get_strategy("decode"), B, 1, Hq, Hkv, D, P,
+                        bytes_per_elem=b)
+    print(f"decode ('decode' registry row): {dec.max_direction:.0f} B/token "
+          f"per direction — independent of cache length")
+
+    n_chunks = prompt // chunk
+    # resident prefill: linear in query rows -> one evaluation at S=prompt
+    res = strategy_cost(get_strategy("prefill"), B, prompt, Hq, Hkv, D, P,
+                        bytes_per_elem=b)
+    entries = [("prefill (cache-resident psum)", res.max_direction)]
+    # KV rings: sum over chunks of the cost at the growing cache length
+    kv_rows_total = chunk * n_chunks * (n_chunks - 1) // 2
+    for name in ("ring", "ring_bidir"):
+        per_row = strategy_cost(
+            get_strategy(name), B, chunk, Hq, Hkv, D, P,
+            bytes_per_elem=b, S_kv=P * chunk,
+        ).max_direction / (P * chunk)  # model is linear in S_kv cache rows
+        entries.append(
+            (f"{name} (cache re-circulates/chunk)", per_row * kv_rows_total)
+        )
+    # tokenring: one full Q+acc pass per chunk (chunk sharded over the ring)
+    tr = strategy_cost(get_strategy("tokenring"), B, chunk, Hq, Hkv, D, P,
+                       bytes_per_elem=b)
+    entries.append(
+        ("tokenring (Q+acc re-circulate/chunk)", tr.max_direction * n_chunks)
+    )
+
+    # sequential neighbor-hops per chunk: collective latency, not bandwidth —
+    # a psum is one fused all-reduce, a ring is P-1 dependent steps
+    hops = {
+        "prefill": 1, "ring": P - 1, "ring_bidir": P - 1, "tokenring": P - 1,
+    }
+    print("| schedule | prompt prefill MB (max-dir) | link time/prompt (us) | ring steps/chunk |")
+    print("|---|---|---|---|")
+    rows = []
+    for label, bytes_ in entries:
+        t = bytes_ / LINK_BW * 1e6
+        print(f"| {label} | {bytes_/1e6:.2f} | {t:.1f} "
+              f"| {hops[label.split()[0]]} |")
+        rows.append((f"serving_model/{label.split()[0]}", t, "us/prompt"))
+    by_name = {label.split()[0]: bytes_ for label, bytes_ in entries}
+    # The KV rings lose outright: re-rotating the filled cache every chunk is
+    # O(prompt^2 / chunk) vs the resident schedule's O(prompt).
+    assert by_name["prefill"] < by_name["ring_bidir"] / 2, entries
+    # TokenRing's sharded-chunk pass is byte-competitive (Q+acc at ~3 B/elem
+    # vs the fp32 psum's ~4) — but it pays (P-1) sequential hops per chunk
+    # where the psum pays one, and its chunk must be ring-sharded, while the
+    # resident schedule keeps the chunk replicated so each request's K/V
+    # scatter into its own cache region locally.  Bytes within ~15% either
+    # way; latency and cache-residency pick the psum for serving.
+    assert abs(by_name["tokenring"] - by_name["prefill"]) < 0.5 * by_name["prefill"]
+    print(
+        "resident prefill moves O(prompt) bytes total; KV rings re-move the "
+        "cache every chunk (O(prompt^2/chunk)); tokenring matches the bytes "
+        f"but takes {P - 1}x the sequential hops per chunk and cannot write "
+        "the resident per-request cache regions locally."
+    )
+    return rows
+
+
+def run():
+    rows = modeled()
+    rows += measured()
+    return rows
+
+
+if __name__ == "__main__":
+    run()

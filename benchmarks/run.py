@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV at the end (harness convention).
   * Figure 6 analog — per-step times, ring vs tokenring (bench_attention_steps;
     modeled on v5e constants + measured on 4 simulated devices in a
     subprocess so this process keeps a single CPU device)
+  * serving — chunked-prefill TTFT / decode tok/s + per-schedule planner
+    link bytes (bench_serving)
   * kernel micro-benchmarks (bench_kernels)
   * roofline summary — from the dry-run artifacts (roofline_report)
 """
@@ -44,6 +46,12 @@ def main() -> None:
     print(proc.stdout[-2000:])
     if proc.returncode != 0:
         print("measured-bench subprocess failed:", proc.stderr[-1000:])
+
+    print("=" * 72)
+    print("Serving: chunked prefill TTFT + planner link bytes per schedule")
+    from benchmarks import bench_serving
+
+    rows += bench_serving.run()
 
     print("=" * 72)
     print("Kernel micro-benchmarks")

@@ -28,8 +28,12 @@ def main():
     state, hist = trainer.run(state, data, log_every=10)
     print(f"loss: {hist[0]:.3f} -> {hist[-1]:.3f}")
 
-    # 3. serve a couple of batched requests with the trained weights
-    eng = ServingEngine(bundle, state["params"], max_batch=2, max_len=64)
+    # 3. serve a couple of batched requests with the trained weights —
+    # prompts prefill in `prefill_chunk`-token steps through the fused chunk
+    # step (token_budget would additionally meter tokens per iteration)
+    eng = ServingEngine(
+        bundle, state["params"], max_batch=2, max_len=64, prefill_chunk=8
+    )
     for i in range(3):
         eng.submit([1 + i, 7, 42], max_new_tokens=8)
     done = eng.run()

@@ -1,9 +1,11 @@
-"""End-to-end serving driver: batched requests + long-context decode demo.
+"""End-to-end serving driver: chunked prefill + long-context decode demo.
 
 TokenRing's serving premise: the KV cache never moves.  This example serves a
-small model with batched requests through the continuous-batching engine,
-then demonstrates the sequence-parallel decode path (sharded cache + 1-token
-Q + lse-merge) directly on a long cache.
+small model with batched requests through the continuous-batching engine —
+prompts prefill in fixed-size chunks (``prefill_chunk``) through the fused
+chunk step while other slots keep decoding, under a per-iteration
+``token_budget`` — then demonstrates the sequence-parallel decode path
+(sharded cache + 1-token Q + lse-merge) directly on a long cache.
 
     PYTHONPATH=src python examples/serve_longcontext.py
 """
@@ -25,13 +27,22 @@ def main():
     bundle = build_model(cfg, pctx)
     params = bundle.init(jax.random.PRNGKey(0))
 
-    # --- batched serving -------------------------------------------------
-    eng = ServingEngine(bundle, params, max_batch=4, max_len=256)
+    # --- batched serving with chunked prefill ----------------------------
+    # prefill_chunk: prompt tokens fed per chunk step (O(prompt/chunk) steps
+    # to first token).  token_budget: max tokens per scheduler iteration,
+    # decode slots reserved first — a long prompt cannot stall the batch.
+    eng = ServingEngine(
+        bundle, params, max_batch=4, max_len=256,
+        prefill_chunk=16, token_budget=24,
+    )
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
-    for _ in range(12):
+    for _ in range(11):
         plen = int(rng.integers(4, 12))
         eng.submit(rng.integers(0, cfg.vocab_size, plen), max_new_tokens=16)
+    # one long prompt rides along: chunked prefill interleaves with the
+    # short requests' decode steps instead of blocking them
+    eng.submit(rng.integers(0, cfg.vocab_size, 120), max_new_tokens=16)
     eng.run()
     s = eng.stats()
     dt = time.perf_counter() - t0
@@ -39,10 +50,15 @@ def main():
         f"batched serving: {s['requests']} requests, {s['tokens']} tokens, "
         f"{s['tokens']/dt:.1f} tok/s, ttft {s['mean_ttft_s']*1e3:.0f} ms"
     )
+    print(
+        f"  {s['decode_steps']} decode steps + {s['prefill_steps']} prefill "
+        f"chunk steps for {s['prefill_tokens']} prompt tokens "
+        f"(vs {s['prefill_tokens']} decode steps token-by-token)"
+    )
 
     # --- long-context decode: cache grows, per-token cost stays flat ------
     state = bundle.init_serve_state(2, 1024)
-    step = jax.jit(bundle.decode_step)
+    step = jax.jit(lambda p, t, s: bundle.decode_step(p, t, s))
     toks = np.zeros((2,), np.int32)
     times = []
     for t in range(192):

@@ -3,6 +3,8 @@
 Public surface:
   * sp_attention  — SP attention on global arrays (ring/tokenring/ulysses/hybrid)
   * sp_decode     — SP decode against a sequence-sharded KV cache
+  * sp_prefill    — SP chunked prefill: prompt chunk vs resident cache + its
+    own local block, merged with the Update() equations (serving prefill)
   * sp_scan       — SP diagonal linear recurrence (SSM / RG-LRU substrate)
   * ParallelContext — static distribution descriptor threaded through models
   * strategy registry — SPStrategy descriptors + comm_cost models behind
@@ -16,6 +18,7 @@ from repro.core.api import (
     choose_strategy,
     sp_attention,
     sp_decode,
+    sp_prefill,
     sp_scan,
 )
 from repro.core.merge import empty_partial, finalize, merge_many, merge_partials
@@ -37,6 +40,7 @@ __all__ = [
     "choose_strategy",
     "sp_attention",
     "sp_decode",
+    "sp_prefill",
     "sp_scan",
     "merge_partials",
     "merge_many",

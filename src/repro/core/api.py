@@ -57,6 +57,7 @@ __all__ = [
     "AttnShapes",
     "sp_attention",
     "sp_decode",
+    "sp_prefill",
     "sp_scan",
     "choose_strategy",
 ]
@@ -86,7 +87,9 @@ class ExecutionPlan:
 
     ``local_fn`` is the uniform per-shard callable (strategy schedule already
     bound); ``cost`` is the resolved strategy's modeled per-device link bytes
-    for one forward pass (None for decode/scan plans).
+    for one pass of the planned step — attention plans always carry it,
+    decode/prefill plans carry it when ``shapes`` were provided, scan plans
+    never do.
     """
 
     kind: str  # "attention" | "decode" | "scan"
@@ -324,33 +327,96 @@ class ParallelContext:
             sp_axes=self.sp_axes, sp_degree=P_sp, cost=cost,
         )
 
+    def _serving_cost(self, name: str, shapes: AttnShapes | None) -> CommCost | None:
+        """Price a registered serving-side schedule for these shapes (the
+        same ``comm_cost`` machinery training plans go through)."""
+        if shapes is None:
+            return None
+        B_loc = shapes.B
+        if self.data_axis is not None:
+            B_loc = max(1, shapes.B // self.mesh.shape[self.data_axis])
+        return strategy_cost(
+            get_strategy(name), B_loc, shapes.Sq, shapes.Hq, shapes.Hkv,
+            shapes.D, self.sp_degree, bytes_per_elem=shapes.dtype_bytes,
+            bidir_links=self.bidir_links, S_kv=shapes.seq_kv,
+        )
+
     def plan_decode(
         self,
         *,
         window: int | None = None,
         scale: float | None = None,
+        shapes: AttnShapes | None = None,
     ) -> ExecutionPlan:
-        """Decode plan: tiny replicated Q against the sequence-sharded cache."""
-        from repro.core.decode import sp_decode_attention
+        """Decode plan: tiny replicated Q against the sequence-sharded cache.
 
+        Binds the registered ``"decode"`` serving strategy; with ``shapes``
+        (``Sq`` = query tokens per step, ``Sk`` = cache capacity) the plan
+        carries its modeled per-step link bytes — ``B*Sq*Hq*(D+2)`` fp32
+        scalars through a ring all-reduce, independent of the cache length.
+        """
+        desc = get_strategy("decode")
         self._validate_axes()
         dp = self.data_axis
         seq = self.seq_spec()
         qspec = P(dp, None, None, None)
         cspec = P(dp, seq, None, None)
         axes = self.sp_axes
+        fn = desc.fn
 
         def local_fn(q, kc, vc, kp, qp):
-            return sp_decode_attention(
+            return fn(
                 q, kc, vc, kp, q_pos=qp, axis_names=axes, causal=True,
                 window=window, scale=scale, impl=self.impl, block_k=self.block_k,
             )
 
         return ExecutionPlan(
-            kind="decode", strategy=None, inner=None, mesh=self.mesh,
+            kind="decode", strategy="decode", inner=None, mesh=self.mesh,
             in_specs=(qspec, cspec, cspec, P(dp, seq), P(dp, None)),
             out_specs=qspec, local_fn=local_fn, sp_axes=self.sp_axes,
-            sp_degree=self.sp_degree,
+            sp_degree=self.sp_degree, cost=self._serving_cost("decode", shapes),
+        )
+
+    def plan_prefill(
+        self,
+        *,
+        window: int | None = None,
+        scale: float | None = None,
+        shapes: AttnShapes | None = None,
+    ) -> ExecutionPlan:
+        """Chunked-prefill plan: a replicated prompt chunk against the
+        resident sharded cache plus its own local block (cross-chunk
+        causality via the Update() merge — see ``core/decode.py``).
+
+        Binds the registered ``"prefill"`` serving strategy; with ``shapes``
+        (``Sq`` = chunk length, ``Sk`` = cache capacity) the plan carries the
+        modeled per-chunk link bytes.
+        """
+        desc = get_strategy("prefill")
+        self._validate_axes()
+        dp = self.data_axis
+        seq = self.seq_spec()
+        qspec = P(dp, None, None, None)
+        cspec = P(dp, seq, None, None)
+        axes = self.sp_axes
+        fn = desc.fn
+
+        def local_fn(q, kn, vn, np_, kc, vc, kp, qp):
+            return fn(
+                q, kn, vn, np_, kc, vc, kp, axis_names=axes, q_pos=qp,
+                window=window, scale=scale, impl=self.impl,
+                block_q=self.block_q, block_k=self.block_k,
+            )
+
+        return ExecutionPlan(
+            kind="prefill", strategy="prefill", inner=None, mesh=self.mesh,
+            in_specs=(
+                qspec, qspec, qspec, P(dp, None),  # chunk q/k/v + positions
+                cspec, cspec, P(dp, seq),          # resident cache + positions
+                P(dp, None),                       # q_pos
+            ),
+            out_specs=qspec, local_fn=local_fn, sp_axes=self.sp_axes,
+            sp_degree=self.sp_degree, cost=self._serving_cost("prefill", shapes),
         )
 
     def plan_scan(self, *, ndim: int, axis: int = 1) -> ExecutionPlan:
@@ -494,8 +560,59 @@ def sp_decode(
         )
         return out
 
-    plan = pctx.plan_decode(window=window, scale=scale)
+    shapes = AttnShapes(
+        B=B, Sq=q.shape[1], Hq=q.shape[2], Hkv=k_cache.shape[2], D=q.shape[3],
+        Sk=k_cache.shape[1], dtype_bytes=jnp.dtype(q.dtype).itemsize,
+    )
+    plan = pctx.plan_decode(window=window, scale=scale, shapes=shapes)
     return plan(q, k_cache, v_cache, k_pos, q_pos)
+
+
+def sp_prefill(
+    q,
+    k_new,
+    v_new,
+    new_pos,
+    k_cache,
+    v_cache,
+    k_pos,
+    q_pos,
+    *,
+    pctx: ParallelContext,
+    window: int | None = None,
+    scale: float | None = None,
+):
+    """Sequence-parallel chunked-prefill attention on global arrays.
+
+    ``q``/``k_new``/``v_new (B,C,H,D)`` and ``new_pos``/``q_pos (B,C)`` are
+    the prompt chunk (replicated over the SP axes); ``k_cache``/``v_cache
+    (B,Skv,Hkv,D)`` and ``k_pos (B,Skv)`` the resident cache holding every
+    *previous* chunk (sharded over the SP axes on dim 1, PAD_POS sentinel for
+    unwritten slots).  The chunk's K/V must be written into the cache by the
+    caller *after* this call — the chunk block is attended locally and merged
+    with the cache partial via the Update() equations (``core/decode.py``).
+    """
+    from repro.core.decode import sp_prefill_chunk_attention
+    from repro.kernels.ref import normalize_positions
+
+    B, C = q.shape[0], q.shape[1]
+    q_pos = normalize_positions(q_pos, B, C)
+    new_pos = normalize_positions(new_pos, B, C)
+    k_pos = normalize_positions(k_pos, B, k_cache.shape[1])
+
+    if not pctx.active:
+        return sp_prefill_chunk_attention(
+            q, k_new, v_new, new_pos, k_cache, v_cache, k_pos,
+            axis_names=(), q_pos=q_pos, window=window, scale=scale,
+            impl=pctx.impl, block_q=pctx.block_q, block_k=pctx.block_k,
+        )
+
+    shapes = AttnShapes(
+        B=B, Sq=C, Hq=q.shape[2], Hkv=k_cache.shape[2], D=q.shape[3],
+        Sk=k_cache.shape[1], dtype_bytes=jnp.dtype(q.dtype).itemsize,
+    )
+    plan = pctx.plan_prefill(window=window, scale=scale, shapes=shapes)
+    return plan(q, k_new, v_new, new_pos, k_cache, v_cache, k_pos, q_pos)
 
 
 def sp_scan(a, b, *, pctx: ParallelContext, axis: int = 1):

@@ -104,6 +104,13 @@ class SPStrategy:
     kv_resident: bool = False  # K/V never leave their home device
     head_divisible: bool = False  # needs Hq % P == 0 and Hkv % P == 0
     auto_eligible: bool = True  # considered by the "auto" planner
+    # Serving-side schedules ("decode", "prefill") run replicated-Q against a
+    # sequence-sharded resident cache: their fn signatures and partition specs
+    # differ from the ring-attention family, so they are planned through
+    # ``ParallelContext.plan_decode`` / ``plan_prefill`` — never through
+    # ``sp_attention``.  Their comm_cost models still live here so the planner
+    # prices serving schedules with the same machinery as training schedules.
+    serving_side: bool = False
     extra_kwargs: frozenset[str] = frozenset()
     description: str = ""
 
@@ -152,6 +159,7 @@ def _ensure_builtins() -> None:
     if _BUILTINS_LOADED:
         return
     _BUILTINS_LOADED = True
+    import repro.core.decode  # noqa: F401  (serving: "decode" + "prefill")
     import repro.core.ring_attention  # noqa: F401
     import repro.core.token_ring  # noqa: F401
     import repro.core.ulysses  # noqa: F401
@@ -187,7 +195,17 @@ def ineligible_reason(
     layout: str | None = None,
     window: int | None = None,
 ) -> str | None:
-    """Why ``desc`` cannot run this shape/config, or None if it can."""
+    """Why ``desc`` cannot run this shape/config, or None if it can.
+
+    Judged for the ring-attention (``sp_attention``) role: serving-side
+    schedules are always ineligible here — they are planned via
+    ``plan_decode`` / ``plan_prefill`` against a resident cache instead.
+    """
+    if desc.serving_side:
+        return (
+            "serving-side schedule (replicated Q vs resident sharded cache); "
+            "plan via plan_decode/plan_prefill, not sp_attention"
+        )
     if window is not None and not desc.supports_window:
         return "does not implement sliding-window attention"
     if window is None and desc.requires_window:

@@ -233,6 +233,28 @@ def run_cell(arch, shape_name, *, multi_pod, strategy, out_dir, force=False,
             }
         except ValueError as e:
             plan_info = {"error": str(e)}
+    elif kind == "decode" and pctx.active and cfg.family in ("dense", "moe", "vlm"):
+        # Serving-side plan: the registered "decode" schedule's modeled
+        # per-step link bytes (context-length independent by construction).
+        try:
+            from repro.core.api import AttnShapes
+
+            plan = pctx.plan_decode(
+                window=cfg.window,
+                shapes=AttnShapes(
+                    B=shape.global_batch, Sq=1, Hq=cfg.n_heads,
+                    Hkv=cfg.n_kv_heads, D=cfg.head_dim, Sk=shape.seq_len,
+                    dtype_bytes=jnp.dtype(cfg.dtype).itemsize,
+                ),
+            )
+            plan_info = {
+                "strategy": plan.strategy,
+                "inner": plan.inner,
+                "predicted_link_bytes_fwd": plan.cost.fwd_bytes,
+                "predicted_link_bytes_bwd": plan.cost.bwd_bytes,
+            }
+        except ValueError as e:
+            plan_info = {"error": str(e)}
 
     t_lower = time.time() - t0
     compiled = lowered.compile()

@@ -1,8 +1,16 @@
 """Serving launcher: batched requests through the continuous-batching engine.
 
+Prompts prefill in fixed-size chunks through the model's fused
+``prefill_chunk`` step (``--prefill-chunk`` tokens per step, interleaved
+with decode under ``--token-budget``); decode runs the resident-cache
+lse-merge psum.  Both schedules are registered strategies — the launcher
+prints their planner-modeled per-step link bytes for the served config next
+to the measured throughput (the serving analog of ``launch/dryrun``'s plan
+record).
+
 Example (CPU, reduced model, 16 batched requests):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-      --requests 16 --max-new 24
+      --requests 16 --max-new 24 --prefill-chunk 16 --token-budget 32
 """
 
 from __future__ import annotations
@@ -15,8 +23,32 @@ import numpy as np
 
 from repro.configs import ARCHS
 from repro.core.api import ParallelContext
+from repro.core.strategies import get_strategy, strategy_cost
 from repro.models import build_model
 from repro.serving.engine import ServingEngine
+
+
+def print_serving_plan(cfg, *, max_batch: int, chunk: int, max_len: int,
+                       sp_degree: int = 4):
+    """Planner view of the serving schedules for this config: modeled
+    per-step link bytes at an SP degree of ``sp_degree`` (the same
+    ``comm_cost`` models ``plan_decode`` / ``plan_prefill`` attach to real
+    multi-device plans)."""
+    bpe = 2 if cfg.dtype == "bfloat16" else 4
+    common = dict(bytes_per_elem=bpe, S_kv=max_len)
+    dec = strategy_cost(
+        get_strategy("decode"), max_batch, 1, cfg.n_heads, cfg.n_kv_heads,
+        cfg.head_dim, sp_degree, **common,
+    )
+    pre = strategy_cost(
+        get_strategy("prefill"), 1, chunk, cfg.n_heads, cfg.n_kv_heads,
+        cfg.head_dim, sp_degree, **common,
+    )
+    print(
+        f"serving plan @ SP={sp_degree}: decode {dec.max_direction:.0f} B/step "
+        f"(batch {max_batch}), prefill {pre.max_direction:.0f} B/chunk "
+        f"(chunk {chunk}) — cache-resident, independent of context length"
+    )
 
 
 def main(argv=None):
@@ -27,6 +59,12 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens per chunked-prefill step")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="prefill tokens per iteration are capped at this "
+                    "minus the number of decoding slots (decode itself is "
+                    "indivisible: one token per decoding slot either way)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -38,9 +76,14 @@ def main(argv=None):
     bundle = build_model(cfg, pctx)
     params = bundle.init(jax.random.PRNGKey(args.seed))
 
+    print_serving_plan(
+        cfg, max_batch=args.max_batch, chunk=args.prefill_chunk,
+        max_len=args.max_len,
+    )
     eng = ServingEngine(
         bundle, params, max_batch=args.max_batch, max_len=args.max_len,
         temperature=args.temperature, seed=args.seed,
+        prefill_chunk=args.prefill_chunk, token_budget=args.token_budget,
     )
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -55,6 +98,10 @@ def main(argv=None):
         f"served {s['requests']} requests, {s['tokens']} tokens in {dt:.2f}s "
         f"({s['tokens']/dt:.1f} tok/s) mean_latency {s['mean_latency_s']*1e3:.0f} ms "
         f"mean_ttft {s['mean_ttft_s']*1e3:.0f} ms"
+    )
+    print(
+        f"steps: {s['decode_steps']} decode, {s['prefill_steps']} prefill "
+        f"chunks ({s['prefill_tokens']} prompt tokens)"
     )
     for r in done[:3]:
         print(f"  req {r.uid}: prompt {r.prompt.tolist()} -> {r.output}")

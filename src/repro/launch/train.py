@@ -43,11 +43,13 @@ def main(argv=None):
                     help="inject a failure at this step (fault-tolerance demo)")
     ap.add_argument(
         "--strategy", default="tokenring",
-        # window-only strategies need a window= the full-attention layers
-        # of a training run never pass; don't advertise them here
+        # window-only strategies need a window= the full-attention layers of
+        # a training run never pass, and serving-side schedules (decode /
+        # prefill) only run against a resident cache; don't advertise either
         choices=["auto"] + [
             n for n in available_strategies()
             if not get_strategy(n).requires_window
+            and not get_strategy(n).serving_side
         ],
     )
     args = ap.parse_args(argv)

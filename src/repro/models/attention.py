@@ -1,8 +1,11 @@
 """Model-level attention layer: projections + RoPE + SP attention core.
 
-Three entry points sharing one parameter set:
-  * ``attention``        — training / prefill self-attention (optionally
-                           filling a KV cache),
+Four entry points sharing one parameter set:
+  * ``attention``        — training / one-shot prefill self-attention
+                           (optionally filling a KV cache),
+  * ``attention_prefill_chunk`` — a C-token prompt chunk against the resident
+                           cache (serving chunked prefill; writes the chunk's
+                           K/V into per-request cache regions),
   * ``attention_decode`` — single-token decode against a sharded cache,
   * ``cross_attention``  — encoder-decoder cross attention (resident KV =
                            TokenRing's natural fit).
@@ -13,12 +16,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import ParallelContext, sp_attention, sp_decode
+from repro.core.api import ParallelContext, sp_attention, sp_decode, sp_prefill
 from repro.models.layers import apply_norm, apply_rope, dense, dense_init, norm_init
 
 __all__ = [
     "attention_init",
     "attention",
+    "attention_prefill_chunk",
     "attention_decode",
     "cross_attention",
 ]
@@ -91,6 +95,47 @@ def attention(
     return y, new_cache
 
 
+def attention_prefill_chunk(
+    p,
+    x,
+    positions,
+    k_cache,
+    v_cache,
+    pos_cache,
+    write_index,
+    *,
+    cfg,
+    pctx: ParallelContext,
+    window: int | None = None,
+    rope: bool = True,
+):
+    """Chunked-prefill step: ``x (B,C,d)`` appended to per-request caches.
+
+    ``positions (B,C)``: global positions of the chunk tokens per request
+    (rows being skipped may carry arbitrary values — their writes are
+    dropped).  ``pos_cache (B,Smax)``: position table, already updated for
+    this chunk (shared across layers).  ``write_index (B,C)``: cache slots to
+    write, with out-of-range values (>= Smax) for rows/tokens that must not
+    land (inactive slots, chunk-tail padding) — dropped by scatter mode.
+
+    The chunk's attention is the two-partial Update() merge (``sp_prefill``):
+    chunk queries vs the resident cache (every *previous* chunk) plus the
+    chunk's own causal block; its K/V are written to the cache afterwards.
+    Returns ``(y, k_cache', v_cache')``.
+    """
+    B, C, _ = x.shape
+    q, k, v = _project_qkv(p, x, positions, cfg, rope=rope, pctx=pctx)
+    out = sp_prefill(
+        q, k, v, positions, k_cache, v_cache, pos_cache, positions,
+        pctx=pctx, window=window,
+    )
+    bidx = jnp.arange(B)[:, None]
+    kc = k_cache.at[bidx, write_index].set(k.astype(k_cache.dtype), mode="drop")
+    vc = v_cache.at[bidx, write_index].set(v.astype(v_cache.dtype), mode="drop")
+    y = dense(p["wo"], out.reshape(B, C, -1), jnp.dtype(cfg.dtype))
+    return y, kc, vc
+
+
 def attention_decode(
     p,
     x,
@@ -110,14 +155,19 @@ def attention_decode(
     ``positions (B,1)``: the global position of the new token per request.
     ``pos_cache (B,Smax)``: position table (already updated for this step —
     it is shared across layers).  ``write_index (B,)``: cache slot to write;
-    per-request slots enable continuous batching.
+    per-request slots enable continuous batching, out-of-range values
+    (>= Smax, rows skipped this step) are dropped.
     Returns ``(y, k_cache', v_cache')``.
     """
     B, S, _ = x.shape
     q, k, v = _project_qkv(p, x, positions, cfg, rope=rope, pctx=pctx)
     bidx = jnp.arange(B)
-    kc = k_cache.at[bidx, write_index].set(k[:, 0].astype(k_cache.dtype))
-    vc = v_cache.at[bidx, write_index].set(v[:, 0].astype(v_cache.dtype))
+    kc = k_cache.at[bidx, write_index].set(
+        k[:, 0].astype(k_cache.dtype), mode="drop"
+    )
+    vc = v_cache.at[bidx, write_index].set(
+        v[:, 0].astype(v_cache.dtype), mode="drop"
+    )
     out = sp_decode(q, kc, vc, pos_cache, positions, pctx=pctx, window=window)
     y = dense(p["wo"], out.reshape(B, S, -1), jnp.dtype(cfg.dtype))
     return y, kc, vc

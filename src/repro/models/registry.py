@@ -35,6 +35,19 @@ class ModelBundle:
     decode_step: Callable[[Any, Any, Any], Any] | None
     init_serve_state: Callable[..., Any] | None
     prefill: Callable[..., Any] | None = None
+    # Chunked serving prefill: (params, tokens (B,C), state, n_valid (B,))
+    # -> (logits, state').  Families without it fall back to token-by-token
+    # cache filling in the serving engine — only sound when
+    # ``decode_rollback_safe`` is set.
+    prefill_chunk: Callable[..., Any] | None = None
+    # Whether the serve state is cache-style (per-slot ``len``/``pos``
+    # bookkeeping, position-masked):  the engine's token-by-token fallback
+    # prefill feeds dummy tokens to other rows and rolls back only ``len``,
+    # which is sound for caches (the garbage slot is overwritten before it is
+    # ever attended) but corrupts recurrent hidden state (ssm / RG-LRU rows
+    # advance irreversibly).  Recurrent families need masked decode steps
+    # before they can serve batched.
+    decode_rollback_safe: bool = False
     encode: Callable[..., Any] | None = None  # enc-dec: fill cross KV
 
     def input_specs(self, shape: ShapeConfig):
@@ -62,8 +75,8 @@ def build_model(cfg: ArchConfig, pctx: ParallelContext) -> ModelBundle:
             pctx=pctx,
             init=partial(_init_wrap, T.init_lm, cfg),
             loss=lambda params, batch: T.lm_loss(params, batch, cfg=cfg, pctx=pctx),
-            decode_step=lambda params, tok, state: T.lm_decode_step(
-                params, tok, state, cfg=cfg, pctx=pctx
+            decode_step=lambda params, tok, state, active=None: T.lm_decode_step(
+                params, tok, state, active, cfg=cfg, pctx=pctx
             ),
             init_serve_state=lambda B, max_len: T.init_decode_cache(
                 cfg, B, max_len, pctx
@@ -71,6 +84,10 @@ def build_model(cfg: ArchConfig, pctx: ParallelContext) -> ModelBundle:
             prefill=lambda params, tokens, positions, cache, prefix_embeds=None: T.lm_prefill(
                 params, tokens, positions, cache, prefix_embeds, cfg=cfg, pctx=pctx
             ),
+            prefill_chunk=lambda params, tok, state, n_valid: T.lm_prefill_chunk(
+                params, tok, state, n_valid, cfg=cfg, pctx=pctx
+            ),
+            decode_rollback_safe=True,
         )
     if fam == "ssm":
         from repro.models import mamba as M
@@ -112,6 +129,7 @@ def build_model(cfg: ArchConfig, pctx: ParallelContext) -> ModelBundle:
             init_serve_state=lambda B, max_len: E.init_encdec_state(
                 cfg, B, max_len, cfg.enc_seq
             ),
+            decode_rollback_safe=True,  # cache-style state (len/pos)
             encode=lambda params, frames, state: E.encdec_encode(
                 params, frames, state, cfg=cfg, pctx=pctx
             ),

@@ -29,6 +29,7 @@ from repro.models.attention import (
     attention,
     attention_decode,
     attention_init,
+    attention_prefill_chunk,
 )
 from repro.models.layers import (
     apply_norm,
@@ -47,6 +48,7 @@ __all__ = [
     "lm_apply",
     "lm_loss",
     "lm_prefill",
+    "lm_prefill_chunk",
     "lm_decode_step",
     "init_decode_cache",
     "constrain",
@@ -273,18 +275,93 @@ def lm_prefill(params, tokens, positions, cache, prefix_embeds=None, *, cfg, pct
     return logits[:, 0], new_cache
 
 
-def lm_decode_step(params, token_ids, cache, *, cfg, pctx):
+def lm_prefill_chunk(params, token_ids, cache, n_valid, *, cfg, pctx):
+    """Chunked prefill: append ``token_ids (B, C)`` to per-request caches.
+
+    ``n_valid (B,)``: how many of the ``C`` chunk slots are real prompt
+    tokens per request — ``0`` skips a row entirely (its cache, positions,
+    and length are untouched), a value ``< C`` handles the prompt tail
+    without retracing (the engine always calls with one static ``C``).
+
+    Row ``b``'s valid tokens land in cache slots ``[len_b, len_b+n_valid_b)``
+    and attend to (a) the resident cache of all previous chunks and (b) the
+    chunk itself, causally — the two partials are merged with the paper's
+    Update() equations (see ``core/decode.py``), so a chunk-size sweep is
+    numerically the one-shot prefill.  Returns ``(logits, new_cache)`` with
+    ``logits (B, V)`` taken at each row's last valid position (garbage for
+    skipped rows).
+    """
+    B, C = token_ids.shape
+    Smax = cache["pos"].shape[1]
+    length = cache["len"]  # (B,)
+    offs = jnp.arange(C, dtype=jnp.int32)[None, :]  # (1, C)
+    positions = length[:, None].astype(jnp.int32) + offs  # (B, C)
+    valid = offs < n_valid[:, None]  # (B, C)
+    # Invalid slots write out of range -> dropped by scatter mode="drop".
+    write_index = jnp.where(valid, length[:, None] + offs, Smax)
+    x = params["embed"]["table"][token_ids].astype(jnp.dtype(cfg.dtype))
+    old_pos = cache["pos"]  # pre-chunk view: resident partial must not see
+    # the chunk's own slots (they are attended locally, pre-write)
+
+    def body(x, xs):
+        p_l, kc_l, vc_l = xs
+        h = apply_norm(p_l["ln1"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        y, kc_l, vc_l = attention_prefill_chunk(
+            p_l["attn"], h, positions, kc_l, vc_l, old_pos, write_index,
+            cfg=cfg, pctx=pctx, window=cfg.window,
+        )
+        x = x + y
+        h = apply_norm(p_l["ln2"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = moe_ffn(p_l["moe"], h, cfg, pctx)
+        else:
+            y = mlp(p_l["mlp"], h, mlp_type=cfg.mlp_type, compute_dtype=jnp.dtype(cfg.dtype))
+        return x + y, (kc_l, vc_l)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(params["final_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    last_idx = jnp.clip(n_valid - 1, 0, C - 1)
+    last = x[jnp.arange(B), last_idx]  # (B, d) — last valid chunk position
+    logits = jnp.einsum(
+        "bd,dv->bv", last.astype(jnp.dtype(cfg.dtype)),
+        _lm_head_w(params, cfg).astype(jnp.dtype(cfg.dtype)),
+    )
+    new_cache = {
+        "k": ks,
+        "v": vs,
+        "pos": old_pos.at[jnp.arange(B)[:, None], write_index].set(
+            positions, mode="drop"
+        ),
+        "len": length + n_valid.astype(length.dtype),
+    }
+    return logits, new_cache
+
+
+def lm_decode_step(params, token_ids, cache, active=None, *, cfg, pctx):
     """One decode step for all requests: ``token_ids (B,)`` -> logits (B,V).
 
     Per-request cache lengths (continuous batching): new K/V are written at
-    ``cache['len']`` slots, positions advance independently.
+    ``cache['len']`` slots, positions advance independently.  ``active
+    (B,)`` (bool, optional) skips rows entirely — no cache write, no length
+    advance — so decode steps interleave with rows still mid-prefill without
+    any rollback bookkeeping.
     """
     B = token_ids.shape[0]
-    write_index = cache["len"]  # (B,)
-    positions = write_index[:, None].astype(jnp.int32)  # global pos == length
+    Smax = cache["pos"].shape[1]
+    length = cache["len"]  # (B,)
+    if active is None:
+        write_index = length
+        new_len = length + 1
+    else:
+        # Inactive rows write out of range (dropped) and keep their length.
+        write_index = jnp.where(active, length, Smax)
+        new_len = jnp.where(active, length + 1, length)
+    positions = length[:, None].astype(jnp.int32)  # global pos == length
     x = params["embed"]["table"][token_ids[:, None]].astype(jnp.dtype(cfg.dtype))
 
-    pos_cache = cache["pos"].at[jnp.arange(B), write_index].set(positions[:, 0])
+    pos_cache = cache["pos"].at[jnp.arange(B), write_index].set(
+        positions[:, 0], mode="drop"
+    )
 
     def body(x, xs):
         p_l, kc_l, vc_l = xs
@@ -307,5 +384,5 @@ def lm_decode_step(params, token_ids, cache, *, cfg, pctx):
         "bsd,dv->bsv", x.astype(jnp.dtype(cfg.dtype)),
         _lm_head_w(params, cfg).astype(jnp.dtype(cfg.dtype)),
     )[:, 0]
-    new_cache = {"k": ks, "v": vs, "pos": pos_cache, "len": cache["len"] + 1}
+    new_cache = {"k": ks, "v": vs, "pos": pos_cache, "len": new_len}
     return logits, new_cache

@@ -1,23 +1,35 @@
-"""Batched serving engine with continuous batching.
+"""Batched serving engine: continuous batching with chunked prefill.
 
 The TokenRing serving story: the KV cache stays sequence-sharded and
-resident (never moves), prefill runs the SP attention schedule, decode uses
-the lse-merge psum (core/decode.py).  This engine adds the request-level
-machinery around those steps:
+resident (never moves), prefill runs the chunk-resident SP schedule, decode
+uses the lse-merge psum (both registered and priced in ``core/strategies.py``
+— see docs/serving.md).  This engine adds the request-level machinery around
+those steps:
 
   * fixed ``max_batch`` decode slots; requests join as slots free up
     (continuous batching — per-request cache lengths are native to the
     position-based kernel masking);
-  * prefill-on-join: a new request's prompt is prefilled into its slot's
-    cache region while other slots keep decoding (chunked prefill is the
-    natural extension; prompts here are prefilled in one shot per slot);
+  * **chunked prefill**: a joining request's prompt is fed through
+    ``bundle.prefill_chunk`` in fixed-size chunks (``prefill_chunk`` tokens)
+    that write straight into its slot's cache region — ``O(prompt/chunk)``
+    steps instead of ``O(prompt)`` decode steps — while the other slots keep
+    decoding every iteration (no prefill stalls);
+  * a **token-budget scheduler**: decoding slots each emit one token per
+    iteration (decode is indivisible and never stalls), then prefilling
+    slots share the remaining ``token_budget - n_decoding`` tokens FCFS by
+    admission order — so the per-iteration total is capped at
+    ``max(token_budget, n_decoding)``.  ``None`` means unmetered: every
+    prefilling slot gets a full chunk per iteration;
   * greedy or temperature sampling; EOS / max-token stop conditions;
   * simple FCFS queue with throughput/latency accounting for the benchmark
-    harness.
+    harness (``benchmarks/bench_serving.py``).
 
-For the single-slot-prefill step we reuse ``decode_step`` token-by-token
-over the prompt (exact, cache-filling); model families with a fused
-``prefill`` (dense/moe/vlm) can batch-prefill aligned prompts.
+Model families without a fused ``prefill_chunk`` but with a cache-style
+serve state (``decode_rollback_safe``, e.g. encdec) fall back to filling the
+cache token-by-token through ``decode_step`` at admission time — exact but
+``O(prompt)`` steps, and it stalls the batch.  Recurrent-state families
+(ssm / RG-LRU) are refused with ``NotImplementedError``: their decode steps
+advance every row, and recurrent state cannot be rolled back per slot.
 """
 
 from __future__ import annotations
@@ -46,28 +58,82 @@ class Request:
 
 
 class ServingEngine:
+    """Continuous-batching engine over a :class:`~repro.models.registry.ModelBundle`.
+
+    Knobs:
+      * ``max_batch`` / ``max_len`` — decode slots and per-slot cache length.
+      * ``prefill_chunk`` — prompt tokens fed per chunked-prefill step (the
+        static chunk width; prompt tails ride along as partial chunks, so
+        there is exactly one compilation).  Larger chunks mean fewer steps
+        and better kernel efficiency; smaller chunks interleave more
+        decode work between prompt pieces (lower decode jitter).
+      * ``token_budget`` — meters *prefill*: an iteration grants prefilling
+        slots at most ``token_budget - n_decoding`` tokens (FCFS).  Decode is
+        indivisible — every decoding slot emits one token per iteration
+        regardless — so the effective per-iteration total is
+        ``max(token_budget, n_decoding)``; size the budget above ``max_batch``
+        for it to be the binding cap.  ``None`` disables metering.
+    """
+
     def __init__(self, bundle, params, *, max_batch: int, max_len: int,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 prefill_chunk: int = 32, token_budget: int | None = None):
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {token_budget}")
         self.bundle = bundle
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.temperature = temperature
+        self.prefill_chunk = prefill_chunk
+        self.token_budget = token_budget
         self.key = jax.random.PRNGKey(seed)
         self.state = bundle.init_serve_state(max_batch, max_len)
         self.slots: list[Request | None] = [None] * max_batch
         self.queue: list[Request] = []
         self.done: list[Request] = []
         self._step = jax.jit(bundle.decode_step)
+        self._chunked = bundle.prefill_chunk is not None
+        self._chunk_step = (
+            jax.jit(bundle.prefill_chunk) if self._chunked else None
+        )
+        if not self._chunked and not bundle.decode_rollback_safe:
+            # Recurrent families (ssm / RG-LRU): decode_step advances every
+            # row's hidden state, and there is no cache-style rollback — the
+            # fallback prefill would silently corrupt concurrent requests.
+            raise NotImplementedError(
+                f"family {bundle.cfg.family!r} has no chunked prefill and its "
+                "recurrent serve state cannot be rolled back per slot; "
+                "batched serving needs masked decode steps for this family"
+            )
         self._uid = 0
+        self._hold_decode: set[int] = set()  # first decode deferred (budget)
+        self.counters = {
+            "decode_steps": 0,
+            "prefill_steps": 0,
+            "prefill_tokens": 0,
+        }
 
     # ------------------------------------------------------------- API
 
     def submit(self, prompt, max_new_tokens=16, eos_id=None) -> Request:
+        """Queue a request.  The prompt must fit the slot cache; generation
+        that would run past ``max_len`` is truncated (the request retires at
+        cache capacity with fewer than ``max_new_tokens`` tokens — no cache
+        write ever lands out of range)."""
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if prompt.size >= self.max_len:
+            raise ValueError(
+                f"prompt of {prompt.size} tokens cannot fit max_len={self.max_len}"
+            )
         self._uid += 1
         req = Request(
             uid=self._uid,
-            prompt=np.asarray(prompt, np.int32),
+            prompt=prompt,
             max_new_tokens=max_new_tokens,
             eos_id=eos_id,
         )
@@ -76,13 +142,13 @@ class ServingEngine:
         return req
 
     def run(self, *, max_steps: int = 10_000):
-        """Drive until queue + slots drain (or max_steps)."""
+        """Drive until queue + slots drain (or max_steps iterations)."""
         for _ in range(max_steps):
             self._admit()
-            if all(s is None for s in self.slots):
-                if not self.queue:
-                    break
-                continue
+            if all(s is None for s in self.slots) and not self.queue:
+                break
+            if self._chunked:
+                self._prefill_tick()
             self._decode_once()
         return self.done
 
@@ -93,7 +159,15 @@ class ServingEngine:
             if slot is None and self.queue:
                 req = self.queue.pop(0)
                 self.slots[i] = req
-                self._prefill_slot(i, req)
+                self._reset_slot_cache(i)
+                req._filled = 0  # prompt tokens already in the cache
+                if not self._chunked:
+                    self._prefill_slot_fallback(i, req)
+                elif len(req.prompt) == 1:
+                    req._next_token = int(req.prompt[-1])
+
+    def _prefilling(self, req) -> bool:
+        return getattr(req, "_filled", 0) < len(req.prompt) - 1
 
     def _reset_slot_cache(self, i):
         """Zero one slot's cache row (len/pos) — other slots untouched."""
@@ -110,32 +184,87 @@ class ServingEngine:
 
         self.state = jax.tree_util.tree_map_with_path(fix, self.state)
 
-    def _prefill_slot(self, i, req):
+    # ---- chunked prefill ------------------------------------------------
+
+    def _prefill_tick(self):
+        """One scheduler iteration's prefill work: split the token budget
+        FCFS across prefilling slots and run a single batched chunk step."""
+        prefilling = [
+            (i, r) for i, r in enumerate(self.slots)
+            if r is not None and self._prefilling(r)
+        ]
+        # FCFS by admission order, not slot index: a newer request admitted
+        # into a lower slot must not preempt an older request's budget.
+        prefilling.sort(key=lambda t: t[1].uid)
+        if not prefilling:
+            return
+        n_decode = sum(
+            1 for r in self.slots if r is not None and not self._prefilling(r)
+        )
+        if self.token_budget is None:
+            budget = len(prefilling) * self.prefill_chunk
+        else:
+            # Decode slots reserve their token first; prefill gets the rest.
+            # budget can hit 0 only while something is decoding (the budget
+            # is >= 1), so prefill never deadlocks: decode completions free
+            # budget on a later iteration.
+            budget = max(self.token_budget - n_decode, 0)
+        C = self.prefill_chunk
+        tokens = np.zeros((self.max_batch, C), np.int32)
+        n_valid = np.zeros((self.max_batch,), np.int32)
+        for i, req in prefilling:
+            remaining = len(req.prompt) - 1 - req._filled
+            a = min(remaining, C, budget)
+            if a <= 0:
+                continue
+            tokens[i, :a] = req.prompt[req._filled:req._filled + a]
+            n_valid[i] = a
+            budget -= a
+        if not n_valid.any():
+            return
+        _, self.state = self._chunk_step(
+            self.params, jnp.asarray(tokens), self.state, jnp.asarray(n_valid)
+        )
+        self.counters["prefill_steps"] += 1
+        self.counters["prefill_tokens"] += int(n_valid.sum())
+        for i, req in prefilling:
+            req._filled += int(n_valid[i])
+            if not self._prefilling(req):
+                # Last prompt token is fed by the slot's first decode step.
+                req._next_token = int(req.prompt[-1])
+                if self.token_budget is not None:
+                    # Metered: this iteration's tokens were already spent on
+                    # the slot's prefill allocation; its first decode waits
+                    # for the next iteration so the budget cap holds.
+                    self._hold_decode.add(i)
+
+    # ---- token-by-token fallback (families without prefill_chunk) -------
+
+    def _prefill_slot_fallback(self, i, req):
         """Feed the prompt through decode steps for this slot only.
 
-        Other active slots receive a dummy token and have their (len, cache)
-        rolled back afterwards — functionally a per-slot prefill.  (A fused
-        chunked-prefill path is the optimization; this is the correctness
-        baseline the tests pin down.)
+        Other active slots receive a dummy token and have their length
+        rolled back afterwards.  Exact but O(prompt) steps, and it stalls
+        the batch — the chunked path above replaces it wherever the model
+        family provides ``prefill_chunk``.
         """
-        self._reset_slot_cache(i)
         others = [
             (j, s) for j, s in enumerate(self.slots) if s is not None and j != i
         ]
-        # snapshot other slots' lengths to restore after the dummy feeds
         lens_before = np.asarray(self.state["len"])
-        for t, tok in enumerate(req.prompt[:-1]):
+        for tok in req.prompt[:-1]:
             toks = np.zeros((self.max_batch,), np.int32)
             toks[i] = tok
-            logits, self.state = self._step(self.params, jnp.asarray(toks), self.state)
-            # roll back the other slots (their dummy token must not count)
+            _, self.state = self._step(self.params, jnp.asarray(toks), self.state)
             if others:
                 new_len = np.asarray(self.state["len"]).copy()
                 for j, _ in others:
                     new_len[j] = lens_before[j]
                 self.state = dict(self.state, len=jnp.asarray(new_len))
-        # the last prompt token is fed by the first decode step
-        req._next_token = int(req.prompt[-1])  # type: ignore[attr-defined]
+        req._filled = len(req.prompt) - 1  # prefill complete -> decode phase
+        req._next_token = int(req.prompt[-1])
+
+    # ---- decode ---------------------------------------------------------
 
     def _sample(self, logits):
         if self.temperature <= 0.0:
@@ -144,14 +273,27 @@ class ServingEngine:
         return jax.random.categorical(sub, logits / self.temperature).astype(jnp.int32)
 
     def _decode_once(self):
+        hold, self._hold_decode = self._hold_decode, set()
         toks = np.zeros((self.max_batch,), np.int32)
         active = []
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or self._prefilling(req) or i in hold:
                 continue
-            toks[i] = getattr(req, "_next_token", 0)
+            toks[i] = req._next_token
             active.append(i)
-        logits, self.state = self._step(self.params, jnp.asarray(toks), self.state)
+        if not active:
+            return
+        if self._chunked:
+            mask = np.zeros((self.max_batch,), bool)
+            mask[active] = True
+            logits, self.state = self._step(
+                self.params, jnp.asarray(toks), self.state, jnp.asarray(mask)
+            )
+        else:
+            logits, self.state = self._step(
+                self.params, jnp.asarray(toks), self.state
+            )
+        self.counters["decode_steps"] += 1
         nxt = np.asarray(self._sample(logits))
         now = time.perf_counter()
         lens = np.asarray(self.state["len"]).copy()
@@ -161,7 +303,7 @@ class ServingEngine:
             if req.t_first is None:
                 req.t_first = now
             req.output.append(tok)
-            req._next_token = tok  # type: ignore[attr-defined]
+            req._next_token = tok
             finished = len(req.output) >= req.max_new_tokens or (
                 req.eos_id is not None and tok == req.eos_id
             )
@@ -181,4 +323,5 @@ class ServingEngine:
             "tokens": toks,
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
             "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+            **self.counters,
         }

@@ -2,8 +2,8 @@
 
 Verifies, on 8 simulated host devices, that every sequence-parallel strategy
 (ring, ring_bidir, tokenring, tokenring_faithful, ulysses, multi-pod hybrid,
-decode, recurrence) matches the single-device oracle — forward AND gradients —
-under zigzag and contiguous layouts, MHA and GQA.
+decode, chunked prefill, recurrence) matches the single-device oracle —
+forward AND gradients — under zigzag and contiguous layouts, MHA and GQA.
 
 Usage:  PYTHONPATH=src python -m repro.testing.strategy_check [check ...]
 Prints ``PASS <name>`` per check; non-zero exit on any failure.
@@ -165,6 +165,57 @@ def check_decode():
     )
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
     print("PASS decode (sharded cache, partial fill)")
+
+
+def check_prefill_chunk():
+    """Chunked SP prefill: a replicated prompt chunk against the resident
+    sharded cache + its own local block, merged with Update() — equals the
+    single-device oracle over the full visible prefix."""
+    from repro.core import sp_prefill
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    pctx = ParallelContext(mesh=mesh, sp_axes=("model",), impl="xla", block_k=32)
+    B, Smax, C, Hq, Hkv, D = 2, 256, 16, 8, 2, 32
+    filled = 96  # cache slots already holding previous chunks
+    rng = np.random.default_rng(43)
+    kc = jnp.asarray(rng.standard_normal((B, Smax, Hkv, D)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, Smax, Hkv, D)), jnp.float32)
+    k_pos = jnp.where(
+        jnp.arange(Smax) < filled, jnp.arange(Smax), PAD_POS
+    ).astype(jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, C, Hq, D)), jnp.float32)
+    k_new = jnp.asarray(rng.standard_normal((B, C, Hkv, D)), jnp.float32)
+    v_new = jnp.asarray(rng.standard_normal((B, C, Hkv, D)), jnp.float32)
+    chunk_pos = filled + jnp.arange(C, dtype=jnp.int32)
+
+    out = jax.jit(
+        lambda q, kn, vn, kc, vc: sp_prefill(
+            q, kn, vn, chunk_pos, kc, vc, k_pos, chunk_pos, pctx=pctx
+        )
+    )(q, k_new, v_new, kc, vc)
+
+    k_full = jnp.concatenate([kc[:, :filled], k_new], axis=1)
+    v_full = jnp.concatenate([vc[:, :filled], v_new], axis=1)
+    pos_full = jnp.concatenate([jnp.arange(filled, dtype=jnp.int32), chunk_pos])
+    ref, _ = attention_reference(
+        q, k_full, v_full, causal=True, q_pos=chunk_pos, k_pos=pos_full
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+    # the empty-cache corner (first chunk of a fresh slot): resident partial
+    # is the merge identity, the chunk's own causal block is the answer
+    empty_pos = jnp.full((Smax,), PAD_POS, jnp.int32)
+    first_pos = jnp.arange(C, dtype=jnp.int32)
+    out0 = jax.jit(
+        lambda q, kn, vn, kc, vc: sp_prefill(
+            q, kn, vn, first_pos, kc, vc, empty_pos, first_pos, pctx=pctx
+        )
+    )(q, k_new, v_new, kc, vc)
+    ref0, _ = attention_reference(
+        q, k_new, v_new, causal=True, q_pos=first_pos, k_pos=first_pos
+    )
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(ref0), **TOL)
+    print("PASS prefill chunk (resident sharded cache + Update() merge)")
 
 
 def check_scan():
@@ -424,6 +475,7 @@ CHECKS = {
     "gradients": check_gradients,
     "hybrid": check_hybrid,
     "decode": check_decode,
+    "prefill": check_prefill_chunk,
     "scan": check_scan,
     "scan_hybrid": check_scan_hybrid,
     "moe": check_moe,

@@ -22,7 +22,10 @@ from repro.core.strategies import (
     unregister_strategy,
 )
 
-BUILTINS = ("ring", "ring_bidir", "tokenring", "tokenring_faithful", "ulysses", "window")
+BUILTINS = (
+    "ring", "ring_bidir", "tokenring", "tokenring_faithful", "ulysses",
+    "window", "decode", "prefill",  # serving-side entries (PR 2)
+)
 
 
 def test_builtins_registered():
@@ -156,6 +159,92 @@ def test_hybrid_eligibility_uses_inner_degree():
         mesh=mesh, sp_axes=("pod", "model"), strategy="ulysses"
     ).plan(shapes)
     assert plan.inner == "ulysses"
+
+
+def test_serving_strategies_registered_and_priced():
+    """The serving schedules are first-class registry entries: priced by the
+    same comm_cost machinery, never run through the sp_attention role."""
+    for name in ("decode", "prefill"):
+        d = get_strategy(name)
+        assert d.serving_side and d.kv_resident and not d.auto_eligible
+        # ineligible for the ring-attention role, whatever the shape …
+        assert "serving-side" in ineligible_reason(d, Hq=8, Hkv=8, P=4)
+        # … so "auto" can never resolve to them
+        assert resolve_strategy("auto", S=4096, Hq=8, Hkv=8, D=64, P=4) != name
+
+    # decode: B*S*Hq*(D+2) fp32 scalars through a (P-1)/P bidirectional-ring
+    # all-reduce — independent of the cache length S_kv
+    B, S, Hq, Hkv, D, P = 2, 1, 8, 2, 64, 4
+    cost = strategy_cost(get_strategy("decode"), B, S, Hq, Hkv, D, P)
+    expect = (P - 1) / P * B * S * Hq * (D + 2) * 4
+    assert cost.fwd_bytes == cost.bwd_bytes == expect
+    for skv in (1024, 512 * 1024):
+        c = strategy_cost(get_strategy("decode"), B, S, Hq, Hkv, D, P, S_kv=skv)
+        assert c.fwd_bytes == expect, "decode cost must not scale with cache"
+
+    # prefill: the same psum at chunk width — linear in the query rows, so a
+    # whole prompt is priced by one evaluation at S = prompt_len
+    c64 = strategy_cost(get_strategy("prefill"), B, 64, Hq, Hkv, D, P)
+    c128 = strategy_cost(get_strategy("prefill"), B, 128, Hq, Hkv, D, P)
+    assert c128.fwd_bytes == 2 * c64.fwd_bytes
+    assert c64.fwd_bytes == (P - 1) / P * B * 64 * Hq * (D + 2) * 4
+
+    # single device: serving needs no wire at all
+    assert strategy_cost(get_strategy("decode"), B, S, Hq, Hkv, D, 1).total == 0.0
+
+    # resident-chunk prefill vs circulating the prompt's KV every chunk: for
+    # a long prompt the psum schedule wins by orders of magnitude (the
+    # arithmetic bench_serving.py tabulates)
+    prompt, chunk = 32768, 256
+    resident = strategy_cost(get_strategy("prefill"), 1, prompt, Hq, Hkv, D, P)
+    ring_per_chunk = strategy_cost(
+        get_strategy("ring_bidir"), 1, chunk, Hq, Hkv, D, P, S_kv=prompt
+    )
+    ring_total = ring_per_chunk.max_direction * (prompt // chunk)
+    assert resident.max_direction < ring_total / 10
+
+
+def test_plan_decode_and_prefill_carry_cost():
+    """plan_decode / plan_prefill resolve the serving schedule with priced
+    plans — the serving analog of the training plan surface."""
+    import jax
+
+    from repro.core.api import AttnShapes, ParallelContext
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pctx = ParallelContext(mesh=mesh, sp_axes=("model",))
+    shapes = AttnShapes(B=2, Sq=1, Hq=8, Hkv=2, D=64, Sk=4096, dtype_bytes=4)
+    plan = pctx.plan_decode(shapes=shapes)
+    assert plan.kind == "decode" and plan.strategy == "decode"
+    expect = strategy_cost(
+        get_strategy("decode"), 2, 1, 8, 2, 64, pctx.sp_degree,
+        bytes_per_elem=4, S_kv=4096,
+    )
+    assert plan.cost == expect
+
+    cshapes = AttnShapes(B=2, Sq=32, Hq=8, Hkv=2, D=64, Sk=4096, dtype_bytes=4)
+    pplan = pctx.plan_prefill(shapes=cshapes)
+    assert pplan.kind == "prefill" and pplan.strategy == "prefill"
+    assert pplan.cost == strategy_cost(
+        get_strategy("prefill"), 2, 32, 8, 2, 64, pctx.sp_degree,
+        bytes_per_elem=4, S_kv=4096,
+    )
+    # shapes are optional (sp_decode's hot path passes them; manual callers
+    # may not care about the cost annotation)
+    assert pctx.plan_decode().cost is None
+
+
+def test_explicit_serving_strategy_rejected_by_attention_plan():
+    """strategy='decode' on the training path is a planning error, not a
+    silent mis-schedule."""
+    import jax
+
+    from repro.core.api import AttnShapes, ParallelContext
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pctx = ParallelContext(mesh=mesh, sp_axes=("model",), strategy="decode")
+    with pytest.raises(ValueError, match="serving-side"):
+        pctx.plan(AttnShapes(B=1, Sq=256, Hq=4, Hkv=4, D=32))
 
 
 def test_register_duplicate_name_raises():

@@ -60,6 +60,13 @@ def test_hybrid_multipod_and_decode():
 
 
 @pytest.mark.slow
+def test_sp_prefill_chunk():
+    """Serving chunked prefill on 8 devices: replicated chunk vs resident
+    sharded cache, cross-chunk causality via the Update() merge."""
+    _run_check("repro.testing.strategy_check", "prefill")
+
+
+@pytest.mark.slow
 def test_sp_scan():
     _run_check("repro.testing.strategy_check", "scan", "scan_hybrid")
 
