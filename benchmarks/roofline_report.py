@@ -77,6 +77,39 @@ def dryrun_table(recs, archs):
     return "\n".join(lines)
 
 
+# TPU v5e machine balance for the kernel-intensity lines below.
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s
+
+
+def backward_flop_byte_table(block_sizes=(128, 256, 512), dtype_bytes=2):
+    """Per-tile arithmetic intensity of the attention kernels, fwd vs bwd.
+
+    Closed forms from the kernel structure (see docs/kernels.md):
+      * forward streams (k, v) per tile while q/acc stay in VMEM:
+        4*bq*bk*D flops over 2*bk*D*b bytes  ->  2*bq/b flop/byte.
+      * backward streams one of {q,dout} or {k,v} per tile (the other pair is
+        grid-resident with the accumulator) plus the row stats; counting both
+        kernels' traffic: 10*bq*bk*D flops over 2*(bq+bk)*D*b bytes
+        ->  5*bq*bk / (b*(bq+bk)) flop/byte.
+    A block size is compute-bound once its intensity clears the machine
+    balance; the tile-skip does not change intensity (it removes tiles whole).
+    """
+    balance = PEAK_FLOPS / HBM_BW
+    lines = [
+        "| tile (bq=bk) | fwd FLOP/byte | bwd FLOP/byte | machine balance | bwd bound |",
+        "|---|---|---|---|---|",
+    ]
+    for blk in block_sizes:
+        fwd = 2.0 * blk / dtype_bytes
+        bwd = 5.0 * blk * blk / (dtype_bytes * (blk + blk))
+        lines.append(
+            f"| {blk} | {fwd:.0f} | {bwd:.0f} | {balance:.0f} | "
+            f"{'compute' if bwd >= balance else 'memory'} |"
+        )
+    return "\n".join(lines)
+
+
 def main():
     from repro.configs import ASSIGNED
 
@@ -85,6 +118,8 @@ def main():
     print(roofline_table(recs, ASSIGNED))
     print("\n## Dry-run details\n")
     print(dryrun_table(recs, ASSIGNED))
+    print("\n## Attention kernel intensity (fwd vs bwd, bf16)\n")
+    print(backward_flop_byte_table())
     recs_mp = load(mesh="multipod")
     ok = sum(1 for r in recs_mp.values() if r["status"] == "ok")
     sk = sum(1 for r in recs_mp.values() if r["status"] == "skipped")

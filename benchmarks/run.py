@@ -8,7 +8,10 @@ Prints ``name,us_per_call,derived`` CSV at the end (harness convention).
     subprocess so this process keeps a single CPU device)
   * serving — chunked-prefill TTFT / decode tok/s + per-schedule planner
     link bytes (bench_serving)
-  * kernel micro-benchmarks (bench_kernels)
+  * kernel micro-benchmarks (bench_kernels) — also writes the
+    machine-readable ``benchmarks/BENCH_kernels.json`` (fwd+bwd wall time,
+    achieved FLOP/s, backward tile-skip ratios) so the kernel perf
+    trajectory is tracked across PRs
   * roofline summary — from the dry-run artifacts (roofline_report)
 """
 
@@ -54,8 +57,8 @@ def main() -> None:
     rows += bench_serving.run()
 
     print("=" * 72)
-    print("Kernel micro-benchmarks")
-    rows += bench_kernels.run()
+    print("Kernel micro-benchmarks (fwd + bwd + tile skip)")
+    rows += bench_kernels.run(json_path=bench_kernels.DEFAULT_JSON)
 
     print("=" * 72)
     print("Roofline summary (from dry-run artifacts)")

@@ -123,6 +123,10 @@ class ParallelContext:
     impl: str = "auto"  # kernel impl: auto | pallas | pallas_interpret | xla
     block_q: int = 512
     block_k: int = 512
+    # Backward kernel tiles (None inherits block_q/block_k); the backward
+    # keeps more live tiles per grid step, so these can trade smaller.
+    block_q_bwd: int | None = None
+    block_k_bwd: int | None = None
     inner_strategy: str | None = None  # hybrid inner; defaults to `strategy`
     # Wire format of the traveling (out, lse) accumulator in TokenRing:
     # "bfloat16" halves the per-direction link bytes at ~1e-3 merge rounding
@@ -213,6 +217,7 @@ class ParallelContext:
         kw = dict(
             causal=causal, window=window, scale=scale, impl=self.impl,
             block_q=self.block_q, block_k=self.block_k,
+            block_q_bwd=self.block_q_bwd, block_k_bwd=self.block_k_bwd,
         )
 
         hybrid = len(self.sp_axes) >= 2
@@ -517,7 +522,8 @@ def sp_attention(
         out, _ = flash_attention(
             q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal, window=window,
             scale=scale, impl=pctx.impl, block_q=pctx.block_q,
-            block_k=pctx.block_k,
+            block_k=pctx.block_k, block_q_bwd=pctx.block_q_bwd,
+            block_k_bwd=pctx.block_k_bwd,
         )
         return out
 

@@ -47,6 +47,8 @@ def hybrid_sp(
     impl: str = "auto",
     block_q: int = 512,
     block_k: int = 512,
+    block_q_bwd: int | None = None,
+    block_k_bwd: int | None = None,
     return_lse: bool = False,
     **inner_kwargs,
 ):
@@ -68,7 +70,8 @@ def hybrid_sp(
         return inner_fn(
             q, k_cur, v_cur, q_pos, kp_cur,
             axis_name=axis_name, causal=causal, window=window, scale=scale,
-            impl=impl, block_q=block_q, block_k=block_k, return_lse=True,
+            impl=impl, block_q=block_q, block_k=block_k,
+            block_q_bwd=block_q_bwd, block_k_bwd=block_k_bwd, return_lse=True,
             **inner_kwargs,
         )
 

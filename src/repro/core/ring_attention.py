@@ -60,6 +60,8 @@ def ring_attention_sp(
     impl: str = "auto",
     block_q: int = 512,
     block_k: int = 512,
+    block_q_bwd: int | None = None,
+    block_k_bwd: int | None = None,
     return_lse: bool = False,
 ):
     """Classic Ring Attention: KV rotates +1, (P-1) unidirectional sends."""
@@ -69,6 +71,7 @@ def ring_attention_sp(
         return flash_attention(
             qq, kk, vv, q_pos=qp, k_pos=kp, causal=causal, window=window,
             scale=scale, impl=impl, block_q=block_q, block_k=block_k,
+            block_q_bwd=block_q_bwd, block_k_bwd=block_k_bwd,
         )
 
     out, lse = empty_partial(q.shape)
@@ -132,6 +135,8 @@ def ring_attention_bidir_sp(
     impl: str = "auto",
     block_q: int = 512,
     block_k: int = 512,
+    block_q_bwd: int | None = None,
+    block_k_bwd: int | None = None,
     return_lse: bool = False,
 ):
     """Bidirectional-KV ring: half the KV shard travels each direction."""
@@ -144,6 +149,7 @@ def ring_attention_bidir_sp(
         return flash_attention(
             qq, kk, vv, q_pos=qp, k_pos=kp, causal=causal, window=window,
             scale=scale, impl=impl, block_q=block_q, block_k=block_k,
+            block_q_bwd=block_q_bwd, block_k_bwd=block_k_bwd,
         )
 
     ka, kb = k[:, :half], k[:, half:]

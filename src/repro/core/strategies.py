@@ -89,8 +89,10 @@ class SPStrategy:
 
     ``fn`` runs inside ``shard_map`` with the uniform signature
     ``fn(q, k, v, q_pos, k_pos, *, axis_name, causal, window, scale, impl,
-    block_q, block_k, return_lse=False, **extra)`` where ``extra`` is limited
-    to the names declared in ``extra_kwargs``.
+    block_q, block_k, block_q_bwd, block_k_bwd, return_lse=False, **extra)``
+    where ``extra`` is limited to the names declared in ``extra_kwargs``
+    (``block_q_bwd``/``block_k_bwd`` size the backward kernels' tiles and
+    default to the forward's — see ``docs/kernels.md``).
     """
 
     name: str

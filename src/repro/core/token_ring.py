@@ -28,7 +28,11 @@ Communication accounting per device per direction (b = element size):
 
 The zigzag layout (``core.zigzag``) supplies the positions; the kernel's
 tile-level skip turns the masked half of the causal work into no-ops, which is
-what makes the balanced layout actually save FLOPs.
+what makes the balanced layout actually save FLOPs.  The same position
+predicate drives the *backward* kernels, so zigzag-causal training gets the
+same ~2x saving — see ``docs/kernels.md`` for the fwd/bwd kernel design
+(grids, VMEM scratch, the ``+ dlse`` cotangent term TokenRing's partial
+merges require, and the tile-skip arithmetic).
 """
 
 from __future__ import annotations
@@ -165,6 +169,8 @@ def token_ring_sp(
     impl: str = "auto",
     block_q: int = 512,
     block_k: int = 512,
+    block_q_bwd: int | None = None,
+    block_k_bwd: int | None = None,
     return_lse: bool = False,
 ):
     """TokenRing SP attention over ``axis_name`` (inside shard_map)."""
@@ -173,6 +179,7 @@ def token_ring_sp(
         return flash_attention(
             qq, kk, vv, q_pos=qp, k_pos=kp, causal=causal, window=window,
             scale=scale, impl=impl, block_q=block_q, block_k=block_k,
+            block_q_bwd=block_q_bwd, block_k_bwd=block_k_bwd,
         )
 
     if variant == "faithful":

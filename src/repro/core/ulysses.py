@@ -40,6 +40,8 @@ def ulysses_sp(
     impl: str = "auto",
     block_q: int = 512,
     block_k: int = 512,
+    block_q_bwd: int | None = None,
+    block_k_bwd: int | None = None,
     return_lse: bool = False,
 ):
     P = lax.psum(1, axis_name)
@@ -69,6 +71,7 @@ def ulysses_sp(
     out, lse = flash_attention(
         qh, kh, vh, q_pos=qp_all, k_pos=kp_all, causal=causal, window=window,
         scale=scale, impl=impl, block_q=block_q, block_k=block_k,
+        block_q_bwd=block_q_bwd, block_k_bwd=block_k_bwd,
     )
     out = head_to_seq(out)
     if not return_lse:

@@ -36,6 +36,8 @@ def window_attention_sp(
     impl: str = "auto",
     block_q: int = 512,
     block_k: int = 512,
+    block_q_bwd: int | None = None,
+    block_k_bwd: int | None = None,
     return_lse: bool = False,
 ):
     P = flat_size(axis_name)
@@ -58,6 +60,7 @@ def window_attention_sp(
     out, lse = flash_attention(
         q, k_ext, v_ext, q_pos=q_pos, k_pos=kp_ext, causal=causal,
         window=window, scale=scale, impl=impl, block_q=block_q, block_k=block_k,
+        block_q_bwd=block_q_bwd, block_k_bwd=block_k_bwd,
     )
     return (out, lse) if return_lse else out
 

@@ -1,15 +1,18 @@
-"""Flash-attention forward Pallas TPU kernel.
+"""Flash-attention forward + backward Pallas TPU kernels.
 
-This is the per-device block compute of every TokenRing / Ring-Attention step
-(the paper's ``Attention(Q_j^i, K_j, V_j)`` producing ``block_out, block_lse``).
+The forward is the per-device block compute of every TokenRing /
+Ring-Attention step (the paper's ``Attention(Q_j^i, K_j, V_j)`` producing
+``block_out, block_lse``).  The backward is the matching pair of blockwise
+recompute kernels that make *training* under TokenRing live at kernel speed
+— ~2/3 of a training step's attention FLOPs are in here.
 
 TPU-native design decisions (vs the CUDA FlashAttention-2 the paper calls):
   * Tiling is expressed through ``BlockSpec``s: HBM->VMEM movement is done by
     the Mosaic pipeline, not hand-rolled ``cp.async`` as on GPU.
-  * Grid is ``(B, Hq, num_q_blocks, num_kv_blocks)`` with the KV dimension
-    marked ``arbitrary`` (sequential): the online-softmax state for one
-    (b, h, q-block) lives in VMEM scratch across consecutive KV-grid steps —
-    the TPU analogue of a CUDA thread-block's register accumulator.
+  * Forward grid is ``(B, Hq, num_q_blocks, num_kv_blocks)`` with the KV
+    dimension marked ``arbitrary`` (sequential): the online-softmax state for
+    one (b, h, q-block) lives in VMEM scratch across consecutive KV-grid
+    steps — the TPU analogue of a CUDA thread-block's register accumulator.
   * ``(block_q, MXU_LANE)`` shaped running max / denominator scratch keeps the
     state layout lane-aligned (8x128 tiles), matching MXU-friendly shapes.
   * Masking is *position-based*: the kernel receives the global token position
@@ -18,13 +21,31 @@ TPU-native design decisions (vs the CUDA FlashAttention-2 the paper calls):
     skipped via ``pl.when`` (this is what makes zigzag-causal cost ~half of
     full-matrix attention instead of just masking it).
 
+The backward is split into two kernels (FlashAttention-2 style — no atomics,
+no cross-program reductions):
+  * **dq kernel** — grid ``(B, Hq, num_q_blocks, num_kv_blocks)``, KV
+    sequential; ``dq`` accumulates in VMEM scratch across KV steps.
+  * **dk/dv kernel** — grid ``(B, Hkv, num_kv_blocks, group, num_q_blocks)``,
+    the (group, q-block) tail sequential; ``dk``/``dv`` accumulate in VMEM
+    scratch.  The GQA group sum happens through the *index maps* (query head
+    ``h_kv * group + g`` streams through the same accumulator) — KV-head
+    gradients never materialize ``Hq``-sized repeats.
+
+Both backward kernels carry the ``+ dlse`` cotangent term: TokenRing
+circulates ``(out, lse)`` partials and merges them downstream, so the lse
+output is *used* and its cotangent must flow into ``ds`` (see
+``docs/kernels.md`` for the derivation).  Both share the forward's
+position-based tile skip, so the zigzag-causal backward computes ~half the
+tiles of a full matrix.
+
 GQA is handled in the index maps (KV head = query head // group) so KV blocks
 are fetched once per query-head group without materializing repeats.
 
-Returns ``(out, lse)`` — the partials TokenRing circulates.
+Forward returns ``(out, lse)`` — the partials TokenRing circulates.
 
-Validated against ``ref.py`` in interpret mode (CPU) across shape/dtype sweeps
-in ``tests/test_kernels.py``.
+Validated against ``ref.py`` (forward) and ``jax.grad`` of the oracle
+(backward) in interpret mode (CPU) across shape/dtype sweeps in
+``tests/test_kernels.py``.
 """
 
 from __future__ import annotations
@@ -39,12 +60,46 @@ from jax.experimental.pallas import tpu as pltpu
 # Renamed TPUCompilerParams -> CompilerParams across JAX versions.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-__all__ = ["flash_attention_fwd_pallas", "PAD_POS"]
+__all__ = [
+    "flash_attention_fwd_pallas",
+    "flash_attention_bwd_pallas",
+    "PAD_POS",
+]
 
 NEG_INF = float(jnp.finfo(jnp.float32).min)
 # Sentinel position for padded KV rows; anything >= PAD_POS/2 is masked out.
 PAD_POS = 2**30
 MXU_LANE = 128
+
+
+def _tile_skip(q_pos, k_pos, *, causal: bool, window: int | None):
+    """Whether a (q-tile, kv-tile) score block is provably all-masked.
+
+    Position-based, so it is exact for contiguous, zigzag, and ring-rotated
+    layouts alike: a tile is dead when every key is padding, every key is
+    causally after every query, or every key is left of every query's window.
+    Shared by the forward kernel, both backward kernels, and the XLA
+    backward's block skip (`ops.backward_tile_counts` evaluates the same
+    predicate to report skip ratios).
+    """
+    k_min = jnp.min(k_pos)
+    all_pad = k_min >= PAD_POS // 2
+    skip = all_pad
+    if causal:
+        skip = jnp.logical_or(jnp.max(q_pos) < k_min, skip)
+    if window is not None:
+        skip = jnp.logical_or(skip, jnp.max(k_pos) <= jnp.min(q_pos) - window)
+    return skip
+
+
+def _tile_mask(q_pos, k_pos, *, causal: bool, window: int | None):
+    """(bq, bk) visibility mask for one score tile (padding/causal/window)."""
+    mask = k_pos[None, :] < PAD_POS // 2
+    if causal:
+        mask = jnp.logical_and(mask, q_pos[:, None] >= k_pos[None, :])
+    if window is not None:
+        mask = jnp.logical_and(mask, q_pos[:, None] - k_pos[None, :] < window)
+    return mask
 
 
 def _fwd_kernel(
@@ -78,18 +133,7 @@ def _fwd_kernel(
 
     # Tile-level skip: under causal masking a tile whose every key position is
     # later than every query position (or is padding) contributes nothing.
-    k_min = jnp.min(k_pos)
-    q_max = jnp.max(q_pos)
-    all_pad = k_min >= PAD_POS // 2
-    if causal:
-        skip = jnp.logical_or(q_max < k_min, all_pad)
-    else:
-        skip = all_pad
-    if window is not None:
-        # Tile entirely left of every query's window start is dead too.
-        q_min = jnp.min(q_pos)
-        k_max = jnp.max(k_pos)
-        skip = jnp.logical_or(skip, k_max <= q_min - window)
+    skip = _tile_skip(q_pos, k_pos, causal=causal, window=window)
 
     @pl.when(jnp.logical_not(skip))
     def _compute():
@@ -100,11 +144,7 @@ def _fwd_kernel(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (bq, bk)
 
-        mask = k_pos[None, :] < PAD_POS // 2
-        if causal:
-            mask = jnp.logical_and(mask, q_pos[:, None] >= k_pos[None, :])
-        if window is not None:
-            mask = jnp.logical_and(mask, q_pos[:, None] - k_pos[None, :] < window)
+        mask = _tile_mask(q_pos, k_pos, causal=causal, window=window)
         scores = jnp.where(mask, scores, NEG_INF)
 
         m_prev = m_ref[:, 0]  # (bq,)
@@ -223,3 +263,274 @@ def flash_attention_fwd_pallas(
     )
     out, lse = call(q_pos, k_pos, q, k, v)
     return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+#
+# Flash backward recompute, per score tile s = (q @ k^T) * scale:
+#     p  = exp(s - lse)                       (true probabilities, no rescan)
+#     dv = p^T @ dout
+#     dp = dout @ v^T
+#     ds = p * (dp - delta + dlse) * scale,   delta = rowsum(dout * out)
+#     dq = ds @ k,   dk = ds^T @ q
+# The ``+ dlse`` term is TokenRing-specific: the lse output feeds downstream
+# online-softmax merges, so d(lse)/d(s) = p contributes p * dlse to ds.
+
+
+def _bwd_p_ds(q, k, v, dout, lse, delta, dlse, q_pos, k_pos, *,
+              causal, window, scale):
+    """Shared tile recompute: returns ``(p, ds)`` for one (bq, bk) tile.
+
+    All inputs are float32 2-D tiles; ``lse``/``delta``/``dlse`` are (bq,)
+    rows.  Fully-masked rows carry ``lse = -inf`` -> the safe substitution
+    makes every masked p exactly 0 (scores are NEG_INF there), so no explicit
+    row_valid select is needed.
+    """
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+    mask = _tile_mask(q_pos, k_pos, causal=causal, window=window)
+    s = jnp.where(mask, s, NEG_INF)
+    lse_safe = jnp.where(jnp.isneginf(lse), 0.0, lse)
+    p = jnp.exp(s - lse_safe[:, None])  # masked entries: exp(NEG_INF) == 0
+    p = jnp.where(mask, p, 0.0)
+    dp = jax.lax.dot_general(
+        dout, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bk)
+    dlse_safe = jnp.where(jnp.isneginf(lse), 0.0, dlse)
+    ds = p * (dp - delta[:, None] + dlse_safe[:, None]) * scale
+    return p, ds
+
+
+def _bwd_dq_kernel(
+    q_pos_ref,  # (1, block_q) int32
+    k_pos_ref,  # (1, block_k) int32
+    q_ref,  # (1, block_q, 1, D)
+    k_ref,  # (1, block_k, 1, D)   KV head = query head // group
+    v_ref,  # (1, block_k, 1, D)
+    dout_ref,  # (1, block_q, 1, D)
+    lse_ref,  # (1, block_q, 1) float32
+    delta_ref,  # (1, block_q, 1) float32  rowsum(dout * out)
+    dlse_ref,  # (1, block_q, 1) float32
+    dq_ref,  # (1, block_q, 1, D) float32 out
+    dq_acc_ref,  # VMEM scratch (block_q, D) float32
+    *,
+    causal: bool,
+    window: int | None,
+    scale: float,
+    num_kv_blocks: int,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc_ref[...] = jnp.zeros_like(dq_acc_ref)
+
+    q_pos = q_pos_ref[0, :]
+    k_pos = k_pos_ref[0, :]
+    skip = _tile_skip(q_pos, k_pos, causal=causal, window=window)
+
+    @pl.when(jnp.logical_not(skip))
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        dout = dout_ref[0, :, 0, :].astype(jnp.float32)
+        _, ds = _bwd_p_ds(
+            q, k, v, dout, lse_ref[0, :, 0], delta_ref[0, :, 0],
+            dlse_ref[0, :, 0], q_pos, k_pos, causal=causal, window=window,
+            scale=scale,
+        )
+        dq_acc_ref[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        dq_ref[0, :, 0, :] = dq_acc_ref[...]
+
+
+def _bwd_dkv_kernel(
+    q_pos_ref,  # (1, block_q) int32
+    k_pos_ref,  # (1, block_k) int32
+    q_ref,  # (1, block_q, 1, D)   query head = h_kv * group + g
+    k_ref,  # (1, block_k, 1, D)
+    v_ref,  # (1, block_k, 1, D)
+    dout_ref,  # (1, block_q, 1, D)
+    lse_ref,  # (1, block_q, 1) float32
+    delta_ref,  # (1, block_q, 1) float32
+    dlse_ref,  # (1, block_q, 1) float32
+    dk_ref,  # (1, block_k, 1, D) float32 out
+    dv_ref,  # (1, block_k, 1, D) float32 out
+    dk_acc_ref,  # VMEM scratch (block_k, D) float32
+    dv_acc_ref,  # VMEM scratch (block_k, D) float32
+    *,
+    causal: bool,
+    window: int | None,
+    scale: float,
+    group: int,
+    num_q_blocks: int,
+):
+    g = pl.program_id(3)
+    iq = pl.program_id(4)
+    # Sequential index over the (group, q-block) tail: the dk/dv accumulators
+    # live across all of it — this is where the GQA group sum happens, with
+    # the index maps streaming each group head's Q through the same scratch.
+    inner = g * num_q_blocks + iq
+
+    @pl.when(inner == 0)
+    def _init():
+        dk_acc_ref[...] = jnp.zeros_like(dk_acc_ref)
+        dv_acc_ref[...] = jnp.zeros_like(dv_acc_ref)
+
+    q_pos = q_pos_ref[0, :]
+    k_pos = k_pos_ref[0, :]
+    skip = _tile_skip(q_pos, k_pos, causal=causal, window=window)
+
+    @pl.when(jnp.logical_not(skip))
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        dout = dout_ref[0, :, 0, :].astype(jnp.float32)
+        p, ds = _bwd_p_ds(
+            q, k, v, dout, lse_ref[0, :, 0], delta_ref[0, :, 0],
+            dlse_ref[0, :, 0], q_pos, k_pos, causal=causal, window=window,
+            scale=scale,
+        )
+        dv_acc_ref[...] += jax.lax.dot_general(
+            p, dout, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # p^T @ dout: (bk, D)
+        dk_acc_ref[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # ds^T @ q: (bk, D)
+
+    @pl.when(inner == group * num_q_blocks - 1)
+    def _finalize():
+        dk_ref[0, :, 0, :] = dk_acc_ref[...]
+        dv_ref[0, :, 0, :] = dv_acc_ref[...]
+
+
+def flash_attention_bwd_pallas(
+    q,
+    k,
+    v,
+    q_pos,
+    k_pos,
+    out,
+    lse,
+    dout,
+    dlse,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """Pallas flash-attention backward: returns ``(dq, dk, dv)`` in float32.
+
+    Shapes mirror the forward (``q (B,Sq,Hq,D)``, ``k/v (B,Sk,Hkv,D)``);
+    ``out``/``lse`` are the forward products (residuals), ``dout``/``dlse``
+    the cotangents.  Two pallas_calls: the dq grid parallelizes over
+    ``(B, Hq, q_blocks)`` with KV sequential; the dk/dv grid parallelizes
+    over ``(B, Hkv, kv_blocks)`` with ``(group, q_blocks)`` sequential so the
+    GQA group sum stays in VMEM scratch.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, Dk = k.shape
+    assert Dk == D and v.shape == k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+
+    doutf = dout.astype(jnp.float32)
+    delta = jnp.sum(doutf * out.astype(jnp.float32), axis=-1)  # (B,Sq,Hq)
+    lse = lse.astype(jnp.float32)
+    dlse = dlse.astype(jnp.float32)
+
+    row_spec = pl.BlockSpec((1, block_q, 1), lambda b, h, iq, ik: (b, iq, h))
+    dq_call = pl.pallas_call(
+        functools.partial(
+            _bwd_dq_kernel, causal=causal, window=window, scale=float(scale),
+            num_kv_blocks=nk,
+        ),
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (b, iq)),  # q_pos
+            pl.BlockSpec((1, block_k), lambda b, h, iq, ik: (b, ik)),  # k_pos
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec(
+                (1, block_k, 1, D), lambda b, h, iq, ik: (b, ik, h // group, 0)
+            ),  # k
+            pl.BlockSpec(
+                (1, block_k, 1, D), lambda b, h, iq, ik: (b, ik, h // group, 0)
+            ),  # v
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            row_spec,  # lse
+            row_spec,  # delta
+            row_spec,  # dlse
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    dq = dq_call(q_pos, k_pos, q, k, v, dout, lse, delta, dlse)
+
+    # dk/dv: query head streamed through the accumulator is h*group + g.
+    qrow_spec = pl.BlockSpec(
+        (1, block_q, 1), lambda b, h, ik, g, iq: (b, iq, h * group + g)
+    )
+    qhead_spec = pl.BlockSpec(
+        (1, block_q, 1, D), lambda b, h, ik, g, iq: (b, iq, h * group + g, 0)
+    )
+    kv_spec = pl.BlockSpec((1, block_k, 1, D), lambda b, h, ik, g, iq: (b, ik, h, 0))
+    dkv_call = pl.pallas_call(
+        functools.partial(
+            _bwd_dkv_kernel, causal=causal, window=window, scale=float(scale),
+            group=group, num_q_blocks=nq,
+        ),
+        grid=(B, Hkv, nk, group, nq),
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda b, h, ik, g, iq: (b, iq)),  # q_pos
+            pl.BlockSpec((1, block_k), lambda b, h, ik, g, iq: (b, ik)),  # k_pos
+            qhead_spec,  # q
+            kv_spec,  # k
+            kv_spec,  # v
+            qhead_spec,  # dout
+            qrow_spec,  # lse
+            qrow_spec,  # delta
+            qrow_spec,  # dlse
+        ],
+        out_specs=[kv_spec, kv_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sk, Hkv, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Sk, Hkv, D), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, D), jnp.float32),
+            pltpu.VMEM((block_k, D), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=(
+                "parallel", "parallel", "parallel", "arbitrary", "arbitrary",
+            ),
+        ),
+        interpret=interpret,
+    )
+    dk, dv = dkv_call(q_pos, k_pos, q, k, v, dout, lse, delta, dlse)
+    return dq, dk, dv

@@ -1,20 +1,25 @@
-"""Jitted public wrapper around the flash-attention kernel.
+"""Jitted public wrapper around the flash-attention kernels.
 
 ``flash_attention`` dispatches between:
-  * ``impl="pallas"``            — the Pallas TPU kernel (real hardware),
-  * ``impl="pallas_interpret"``  — same kernel body, interpreted on CPU
+  * ``impl="pallas"``            — the Pallas TPU kernels (real hardware),
+  * ``impl="pallas_interpret"``  — same kernel bodies, interpreted on CPU
                                    (used by the correctness tests),
-  * ``impl="xla"``               — a scan-over-KV-blocks pure-jnp flash
+  * ``impl="xla"``               — a scan-over-blocks pure-jnp flash
                                    (O(block) memory, used for CPU runs and for
                                    the 512-device dry-run compile where Mosaic
                                    isn't available),
   * ``impl="auto"``              — pallas on TPU, xla elsewhere.
 
 All impls return the TokenRing partials ``(out, lse)`` and share one
-``custom_vjp``: the backward pass is a blockwise recompute (flash-style, no
-O(S^2) residuals) written directly in jnp, so training works for every impl
-today; a Pallas backward kernel can later slot into ``_flash_bwd`` without
-touching callers.
+``custom_vjp``.  The backward is a blockwise recompute (flash-style, no
+O(S^2) residuals) carrying the ``+ dlse`` cotangent term TokenRing's partial
+merges require; on the pallas impls it runs as the two Pallas kernels in
+``flash_attention.py`` (dq; dk/dv with the GQA group summed in VMEM scratch),
+on xla as a tiled jnp double-scan.  Every backward path skips provably
+all-masked tiles — the same position predicate the forward uses — so
+zigzag-causal training costs ~half of full-matrix (`backward_tile_counts`
+reports the exact ratio).  Backward tile sizes default to the forward's and
+are tunable separately via ``block_q_bwd`` / ``block_k_bwd``.
 """
 
 from __future__ import annotations
@@ -26,10 +31,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.flash_attention import PAD_POS, flash_attention_fwd_pallas
+from repro.kernels.flash_attention import (
+    PAD_POS,
+    flash_attention_bwd_pallas,
+    flash_attention_fwd_pallas,
+)
 from repro.kernels.ref import normalize_positions
 
-__all__ = ["flash_attention", "FlashConfig"]
+__all__ = ["flash_attention", "FlashConfig", "backward_tile_counts"]
 
 NEG_INF = float(jnp.finfo(jnp.float32).min)
 
@@ -41,6 +50,11 @@ class FlashConfig:
     scale: float | None = None
     block_q: int = 512
     block_k: int = 512
+    # Backward tile sizes; None inherits the forward's.  The backward holds
+    # more live tiles per step (q, k, v, dout + two accumulators), so smaller
+    # blocks can be the right VMEM trade on real hardware.
+    block_q_bwd: int | None = None
+    block_k_bwd: int | None = None
     impl: str = "auto"  # auto | pallas | pallas_interpret | xla
 
     def resolve_impl(self) -> str:
@@ -48,13 +62,35 @@ class FlashConfig:
             return self.impl
         return "pallas" if jax.default_backend() == "tpu" else "xla"
 
+    @property
+    def bwd_block_q(self) -> int:
+        return self.block_q_bwd if self.block_q_bwd is not None else self.block_q
+
+    @property
+    def bwd_block_k(self) -> int:
+        return self.block_k_bwd if self.block_k_bwd is not None else self.block_k
+
 
 def _pick_block(s: int, target: int) -> int:
-    """Largest power-of-two block <= target dividing s (s itself if small)."""
+    """Largest power-of-two block <= target dividing s (s itself if small).
+
+    Raises when a sequence that *needs* tiling (``s > target``) only admits
+    sub-sublane tiles (< 8 rows, e.g. ``s = 2 * odd``): silently degrading to
+    near-per-row grid steps is a perf cliff, not a fallback — pad the
+    sequence to a multiple of 8 (PAD_POS sentinel rows are masked out for
+    free) or pass a block size that divides it instead.
+    """
     b = min(target, s)
     while s % b:
         b //= 2
-    return max(b, 1)
+    if s > target and b < min(8, target):
+        raise ValueError(
+            f"sequence length {s} has no power-of-two tile in "
+            f"[{min(8, target)}, {target}] (best divisor: {b}); pad it to a "
+            f"multiple of 8 (masked PAD_POS sentinel rows are free) or pass "
+            f"a block size that divides it"
+        )
+    return b
 
 
 # ---------------------------------------------------------------------------
@@ -121,17 +157,78 @@ def _xla_flash_fwd(cfg: FlashConfig, q, k, v, q_pos, k_pos):
 
 
 # ---------------------------------------------------------------------------
-# Blockwise backward (flash-style recompute), shared by all impls.
+# Blockwise backward (flash-style recompute).
 # ---------------------------------------------------------------------------
 
 
-def _flash_bwd(cfg: FlashConfig, q, k, v, q_pos, k_pos, out, lse, dout, dlse):
+def _tile_skip_grid(q_pos, k_pos, bq, bk, *, causal, window):
+    """Per-(batch, q-tile, kv-tile) dead-tile predicate, ``(B, nq, nk)`` bool.
+
+    The vectorized form of the kernels' per-program ``_tile_skip``: a tile is
+    dead when every key is padding, causally after every query, or left of
+    every query's window.  Used by the XLA backward's block skip and by
+    :func:`backward_tile_counts`.
+    """
+    B, Sq = q_pos.shape
+    Sk = k_pos.shape[1]
+    nq, nk = Sq // bq, Sk // bk
+    qp = q_pos.reshape(B, nq, bq)
+    kp = k_pos.reshape(B, nk, bk)
+    q_max = jnp.max(qp, axis=-1)  # (B, nq)
+    k_min = jnp.min(kp, axis=-1)  # (B, nk)
+    skip = jnp.broadcast_to((k_min >= PAD_POS // 2)[:, None, :], (B, nq, nk))
+    if causal:
+        skip = jnp.logical_or(skip, q_max[:, :, None] < k_min[:, None, :])
+    if window is not None:
+        q_min = jnp.min(qp, axis=-1)
+        k_max = jnp.max(kp, axis=-1)
+        skip = jnp.logical_or(
+            skip, k_max[:, None, :] <= q_min[:, :, None] - window
+        )
+    return skip
+
+
+def backward_tile_counts(
+    q_pos,
+    k_pos,
+    *,
+    block_q: int,
+    block_k: int,
+    causal: bool = False,
+    window: int | None = None,
+):
+    """``(computed, total)`` backward score tiles for a position layout.
+
+    Counts per (batch, q-tile, kv-tile) — exactly the predicate each Pallas
+    backward program evaluates, so ``computed / total`` is the kernel's true
+    block-compute fraction (zigzag-causal lands near ``(1 + 1/nq) / 2``).
+    The XLA backward skips a tile only when it is dead for *every* batch row
+    (its ``lax.cond`` needs one scalar), so its skip count can be slightly
+    more conservative under per-request position layouts.
+    """
+    B, Sq = q_pos.shape
+    bq = _pick_block(Sq, block_q)
+    bk = _pick_block(k_pos.shape[1], block_k)
+    skip = _tile_skip_grid(q_pos, k_pos, bq, bk, causal=causal, window=window)
+    total = int(np.prod(skip.shape))
+    computed = total - int(jnp.sum(skip))
+    return computed, total
+
+
+def _xla_flash_bwd(cfg: FlashConfig, q, k, v, q_pos, k_pos, out, lse, dout, dlse):
+    """Tiled jnp backward: KV-block scan x Q-block scan, dead tiles skipped.
+
+    Mirrors the Pallas kernels' block structure (same recompute, same
+    ``+ dlse`` term, same skip predicate) so CPU/XLA training gets the same
+    ~2x zigzag-causal saving — ``lax.cond`` executes only the taken branch.
+    """
     B, Sq, Hq, D = q.shape
     _, Sk, Hkv, _ = k.shape
     group = Hq // Hkv
     scale = cfg.scale if cfg.scale is not None else 1.0 / (D**0.5)
-    bk = _pick_block(Sk, cfg.block_k)
-    nk = Sk // bk
+    bq = _pick_block(Sq, cfg.bwd_block_q)
+    bk = _pick_block(Sk, cfg.bwd_block_k)
+    nq, nk = Sq // bq, Sk // bk
 
     qf = q.astype(jnp.float32)
     doutf = dout.astype(jnp.float32)
@@ -145,59 +242,124 @@ def _flash_bwd(cfg: FlashConfig, q, k, v, q_pos, k_pos, out, lse, dout, dlse):
     # Safe lse for exp(): fully-masked rows have lse=-inf and p ends up 0.
     lse_safe = jnp.where(row_valid, lse, 0.0)
 
+    def q_tiles(x):
+        # (B, Sq, ...) -> (nq, B, bq, ...)
+        return jnp.moveaxis(x.reshape((B, nq, bq) + x.shape[2:]), 1, 0)
+
+    qb = q_tiles(qf)  # (nq,B,bq,Hq,D)
+    dob = q_tiles(doutf)
+    qpb = q_tiles(q_pos)  # (nq,B,bq)
+    lseb = q_tiles(lse_safe)  # (nq,B,bq,Hq)
+    deltab = q_tiles(delta)
+    dlseb = q_tiles(dlse)
+
     kb = jnp.moveaxis(k.reshape(B, nk, bk, Hkv, D), 1, 0)
     vb = jnp.moveaxis(v.reshape(B, nk, bk, Hkv, D), 1, 0)
     kpb = jnp.moveaxis(k_pos.reshape(B, nk, bk), 1, 0)  # (nk, B, bk)
 
-    def step(dq_acc, blk):
-        kb_, vb_, kp_ = blk
+    # One evaluation of the kernels' skip predicate for the whole grid,
+    # batch-reduced to the scalar lax.cond needs (a tile runs unless it is
+    # dead for *every* batch row), threaded through the scans as xs.
+    skip_grid = jnp.moveaxis(
+        jnp.all(
+            _tile_skip_grid(
+                q_pos, k_pos, bq, bk, causal=cfg.causal, window=cfg.window
+            ),
+            axis=0,
+        ),
+        1, 0,
+    )  # (nk, nq)
+
+    def kv_step(dq_acc, kv_blk):
+        kb_, vb_, kp_, skip_col = kv_blk
         if group > 1:
-            kbx = jnp.repeat(kb_, group, axis=2)
-            vbx = jnp.repeat(vb_, group, axis=2)
+            kbx = jnp.repeat(kb_, group, axis=2).astype(jnp.float32)
+            vbx = jnp.repeat(vb_, group, axis=2).astype(jnp.float32)
         else:
-            kbx, vbx = kb_, vb_
-        scores = (
-            jnp.einsum("bqhd,bkhd->bhqk", qf, kbx.astype(jnp.float32)) * scale
+            kbx = kb_.astype(jnp.float32)
+            vbx = vb_.astype(jnp.float32)
+
+        def q_step(carry, q_blk):
+            dk_acc, dv_acc = carry
+            qb_, dob_, qp_, lse_, delta_, dlse_, skip = q_blk
+
+            def compute(_):
+                s = jnp.einsum("bqhd,bkhd->bhqk", qb_, kbx) * scale
+                mask = kp_[:, None, :] < PAD_POS // 2  # (B, 1, bk)
+                mask = jnp.broadcast_to(mask, (B, bq, bk))
+                if cfg.causal:
+                    mask = jnp.logical_and(
+                        mask, qp_[:, :, None] >= kp_[:, None, :]
+                    )
+                if cfg.window is not None:
+                    mask = jnp.logical_and(
+                        mask, qp_[:, :, None] - kp_[:, None, :] < cfg.window
+                    )
+                s = jnp.where(mask[:, None], s, NEG_INF)
+                # p: true softmax probabilities recovered from lse.
+                p = jnp.exp(s - lse_.transpose(0, 2, 1)[..., None])
+                p = jnp.where(mask[:, None], p, 0.0)
+                dp = jnp.einsum("bqhd,bkhd->bhqk", dob_, vbx)
+                ds = (
+                    p
+                    * (
+                        dp
+                        - delta_.transpose(0, 2, 1)[..., None]
+                        + dlse_.transpose(0, 2, 1)[..., None]
+                    )
+                    * scale
+                )  # (B,Hq,bq,bk)
+                dq_t = jnp.einsum("bhqk,bkhd->bqhd", ds, kbx)
+                dk_full = jnp.einsum("bhqk,bqhd->bkhd", ds, qb_)
+                dv_full = jnp.einsum("bhqk,bqhd->bkhd", p, dob_)
+                if group > 1:
+                    dk_t = dk_full.reshape(B, bk, Hkv, group, D).sum(axis=3)
+                    dv_t = dv_full.reshape(B, bk, Hkv, group, D).sum(axis=3)
+                else:
+                    dk_t, dv_t = dk_full, dv_full
+                return dq_t, dk_t, dv_t
+
+            def skipped(_):
+                return (
+                    jnp.zeros((B, bq, Hq, D), jnp.float32),
+                    jnp.zeros((B, bk, Hkv, D), jnp.float32),
+                    jnp.zeros((B, bk, Hkv, D), jnp.float32),
+                )
+
+            dq_t, dk_t, dv_t = jax.lax.cond(skip, skipped, compute, None)
+            return (dk_acc + dk_t, dv_acc + dv_t), dq_t
+
+        (dk_, dv_), dq_tiles_ = jax.lax.scan(
+            q_step,
+            (
+                jnp.zeros((B, bk, Hkv, D), jnp.float32),
+                jnp.zeros((B, bk, Hkv, D), jnp.float32),
+            ),
+            (qb, dob, qpb, lseb, deltab, dlseb, skip_col),
         )
-        mask = kp_[:, None, :] < PAD_POS // 2  # (B, 1, bk)
-        mask = jnp.broadcast_to(mask, (B, Sq, kp_.shape[-1]))
-        if cfg.causal:
-            mask = jnp.logical_and(mask, q_pos[:, :, None] >= kp_[:, None, :])
-        if cfg.window is not None:
-            mask = jnp.logical_and(
-                mask, q_pos[:, :, None] - kp_[:, None, :] < cfg.window
-            )
-        # p: true softmax probabilities recovered from lse.
-        p = jnp.exp(scores - lse_safe.transpose(0, 2, 1)[..., None])
-        p = jnp.where(mask[:, None], p, 0.0)
-        p = jnp.where(row_valid.transpose(0, 2, 1)[..., None], p, 0.0)
+        return dq_acc + dq_tiles_, (dk_, dv_)
 
-        dp = jnp.einsum("bqhd,bkhd->bhqk", doutf, vbx.astype(jnp.float32))
-        ds = (
-            p
-            * (
-                dp
-                - delta.transpose(0, 2, 1)[..., None]
-                + dlse.transpose(0, 2, 1)[..., None]
-            )
-            * scale
-        )  # (B,H,Sq,bk)
-
-        dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds, kbx.astype(jnp.float32))
-        dk_full = jnp.einsum("bhqk,bqhd->bkhd", ds, qf)  # (B,bk,Hq,D)
-        dv_full = jnp.einsum("bhqk,bqhd->bkhd", p, doutf)
-        if group > 1:
-            dk_ = dk_full.reshape(B, bk, Hkv, group, D).sum(axis=3)
-            dv_ = dv_full.reshape(B, bk, Hkv, group, D).sum(axis=3)
-        else:
-            dk_, dv_ = dk_full, dv_full
-        return dq_acc, (dk_, dv_)
-
-    dq0 = jnp.zeros((B, Sq, Hq, D), jnp.float32)
-    dq, (dks, dvs) = jax.lax.scan(step, dq0, (kb, vb, kpb))
+    dq0 = jnp.zeros((nq, B, bq, Hq, D), jnp.float32)
+    dq_tiled, (dks, dvs) = jax.lax.scan(kv_step, dq0, (kb, vb, kpb, skip_grid))
+    dq = jnp.moveaxis(dq_tiled, 0, 1).reshape(B, Sq, Hq, D)
     dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk, Hkv, D)
     dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk, Hkv, D)
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def _flash_bwd(cfg: FlashConfig, q, k, v, q_pos, k_pos, out, lse, dout, dlse):
+    impl = cfg.resolve_impl()
+    if impl in ("pallas", "pallas_interpret"):
+        Sq, Sk = q.shape[1], k.shape[1]
+        dq, dk, dv = flash_attention_bwd_pallas(
+            q, k, v, q_pos, k_pos, out, lse, dout, dlse,
+            causal=cfg.causal, window=cfg.window, scale=cfg.scale,
+            block_q=_pick_block(Sq, cfg.bwd_block_q),
+            block_k=_pick_block(Sk, cfg.bwd_block_k),
+            interpret=impl == "pallas_interpret",
+        )
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+    return _xla_flash_bwd(cfg, q, k, v, q_pos, k_pos, out, lse, dout, dlse)
 
 
 # ---------------------------------------------------------------------------
@@ -258,12 +420,15 @@ def flash_attention(
     scale: float | None = None,
     block_q: int = 512,
     block_k: int = 512,
+    block_q_bwd: int | None = None,
+    block_k_bwd: int | None = None,
     impl: str = "auto",
 ):
     """Public flash attention returning TokenRing partials ``(out, lse)``.
 
     See module docstring for impl choices.  ``q_pos``/``k_pos`` default to
-    ``arange`` (contiguous layout).
+    ``arange`` (contiguous layout).  ``block_q_bwd``/``block_k_bwd`` tune the
+    backward tiles independently (None inherits the forward's).
     """
     B, Sq, Hq, D = q.shape
     _, Sk, Hkv, _ = k.shape
@@ -275,6 +440,8 @@ def flash_attention(
         scale=scale,
         block_q=block_q,
         block_k=block_k,
+        block_q_bwd=block_q_bwd,
+        block_k_bwd=block_k_bwd,
         impl=impl,
     )
     return _flash(cfg, q, k, v, q_pos, k_pos)

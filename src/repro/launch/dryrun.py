@@ -230,6 +230,15 @@ def run_cell(arch, shape_name, *, multi_pod, strategy, out_dir, force=False,
                 "inner": plan.inner,
                 "predicted_link_bytes_fwd": plan.cost.fwd_bytes,
                 "predicted_link_bytes_bwd": plan.cost.bwd_bytes,
+                # Kernel view: the plan now covers the backward too — which
+                # impl the flash custom_vjp dispatches and its tile sizes.
+                "kernel": {
+                    "impl": pctx.impl,
+                    "block_q": pctx.block_q,
+                    "block_k": pctx.block_k,
+                    "block_q_bwd": pctx.block_q_bwd or pctx.block_q,
+                    "block_k_bwd": pctx.block_k_bwd or pctx.block_k,
+                },
             }
         except ValueError as e:
             plan_info = {"error": str(e)}

@@ -52,12 +52,32 @@ def main(argv=None):
             and not get_strategy(n).serving_side
         ],
     )
+    ap.add_argument(
+        "--impl", default="auto",
+        choices=["auto", "pallas", "pallas_interpret", "xla"],
+        help="flash-attention kernel impl (forward AND backward; 'auto' is "
+        "pallas on TPU, xla elsewhere)",
+    )
+    ap.add_argument("--block-q", type=int, default=512)
+    ap.add_argument("--block-k", type=int, default=512)
+    ap.add_argument(
+        "--block-q-bwd", type=int, default=None,
+        help="backward dq/dkv kernel Q tile (default: --block-q)",
+    )
+    ap.add_argument(
+        "--block-k-bwd", type=int, default=None,
+        help="backward dq/dkv kernel KV tile (default: --block-k)",
+    )
     args = ap.parse_args(argv)
 
     cfg = ARCHS[args.arch]
     if args.reduced:
         cfg = cfg.reduced()
-    pctx = ParallelContext(mesh=None, strategy=args.strategy, impl="auto")
+    pctx = ParallelContext(
+        mesh=None, strategy=args.strategy, impl=args.impl,
+        block_q=args.block_q, block_k=args.block_k,
+        block_q_bwd=args.block_q_bwd, block_k_bwd=args.block_k_bwd,
+    )
     bundle = build_model(cfg, pctx)
 
     inj = FailureInjector([args.fail_at]) if args.fail_at is not None else None

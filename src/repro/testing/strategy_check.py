@@ -84,38 +84,69 @@ def check_strategies():
 
 
 def check_gradients():
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
-    q, k, v = _data(Hq=8, Hkv=4, seed=7)
+    """``jax.grad`` of every registered (non-serving) SP strategy against the
+    oracle's autodiff — tokenring bidir + faithful, ring, ring_bidir, ulysses,
+    window — at whatever device count the subprocess was launched with
+    (``REPRO_CHECK_DEVICES``: 4 and 8 in CI).  Exercises the full backward
+    stack: flash custom_vjp (tile-skipped XLA bwd) differentiated through
+    each strategy's ppermute/all-to-all schedule inside shard_map.
+    """
+    from repro.core.strategies import ineligible_reason, registered_strategies
+
+    n_dev = len(jax.devices())
+    P_sp = 4
+    mesh = jax.make_mesh((n_dev // P_sp, P_sp), ("data", "model"))
+    Hq, Hkv, W = 8, 4, 96
+    q, k, v = _data(Hq=Hq, Hkv=Hkv, seed=7)
     S = q.shape[1]
     rng = np.random.default_rng(9)
     w = jnp.asarray(rng.standard_normal(q.shape), jnp.float32)
-    pos = _positions(S, 4, "zigzag")
-    wz = to_zigzag(w, 4, axis=1)
 
-    def ref_loss(q, k, v):
-        out, _ = attention_reference(q, k, v, causal=True)
-        return jnp.sum(out * w)
+    def ref_grads(window):
+        def ref_loss(q, k, v):
+            out, _ = attention_reference(q, k, v, causal=True, window=window)
+            return jnp.sum(out * w)
 
-    g_ref = jax.jit(jax.grad(ref_loss, argnums=(0, 1, 2)))(q, k, v)
+        return jax.jit(jax.grad(ref_loss, argnums=(0, 1, 2)))(q, k, v)
 
-    for strategy in ["ring", "tokenring", "tokenring_faithful"]:
-        pctx = ParallelContext(
-            mesh=mesh, sp_axes=("model",), strategy=strategy, impl="xla",
-            block_q=64, block_k=64,
+    g_ref = {None: ref_grads(None), W: ref_grads(W)}
+
+    checked = 0
+    for desc in registered_strategies():
+        if desc.serving_side:
+            continue
+        window = W if desc.requires_window else None
+        layout = desc.requires_layout or "zigzag"
+        why = ineligible_reason(
+            desc, Hq=Hq, Hkv=Hkv, P=P_sp, layout=layout, window=window
         )
+        assert why is None, f"{desc.name} unexpectedly ineligible: {why}"
+        pctx = ParallelContext(
+            mesh=mesh, sp_axes=("model",), strategy=desc.name, layout=layout,
+            impl="xla", block_q=64, block_k=64, block_q_bwd=32, block_k_bwd=32,
+        )
+        pos = _positions(S, P_sp, layout)
+        w_l = _layout(w, P_sp, layout)
 
         def sp_loss(q, k, v):
-            qz, kz, vz = (to_zigzag(x, 4, axis=1) for x in (q, k, v))
-            out = sp_attention(qz, kz, vz, pos, pos, pctx=pctx, causal=True)
-            return jnp.sum(out * wz)
+            ql, kl, vl = (_layout(x, P_sp, layout) for x in (q, k, v))
+            out = sp_attention(
+                ql, kl, vl, pos, pos, pctx=pctx, causal=True, window=window
+            )
+            return jnp.sum(out * w_l)
 
         g = jax.jit(jax.grad(sp_loss, argnums=(0, 1, 2)))(q, k, v)
-        for a, b, nm in zip(g, g_ref, "qkv"):
+        for a, b, nm in zip(g, g_ref[window], "qkv"):
             np.testing.assert_allclose(
                 np.asarray(a), np.asarray(b), atol=5e-4, rtol=5e-4,
-                err_msg=f"{strategy} d{nm}",
+                err_msg=f"{desc.name} d{nm}",
             )
-        print(f"PASS gradients strategy={strategy}")
+        checked += 1
+        print(
+            f"PASS gradients strategy={desc.name} layout={layout} "
+            f"window={window} ({n_dev} devices)"
+        )
+    assert checked >= 6, f"only {checked} strategies gradient-checked"
 
 
 def check_hybrid():
@@ -422,7 +453,8 @@ def check_registry_plugin():
 
     def allgather_sp(
         q, k, v, q_pos, k_pos, *, axis_name, causal=False, window=None,
-        scale=None, impl="auto", block_q=512, block_k=512, return_lse=False,
+        scale=None, impl="auto", block_q=512, block_k=512, block_q_bwd=None,
+        block_k_bwd=None, return_lse=False,
     ):
         # Naive baseline: gather every KV shard and attend locally.
         k_all = jax.lax.all_gather(k, axis_name, axis=1, tiled=True)
@@ -486,7 +518,8 @@ CHECKS = {
 
 def main(argv):
     names = argv[1:] or list(CHECKS)
-    assert len(jax.devices()) >= 8, jax.devices()
+    want = int(os.environ.get("REPRO_CHECK_DEVICES", "8"))
+    assert len(jax.devices()) >= want, jax.devices()
     for name in names:
         CHECKS[name]()
     print("ALL CHECKS PASSED")

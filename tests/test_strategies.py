@@ -15,10 +15,12 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run_check(module, *args, timeout=900):
+def _run_check(module, *args, timeout=900, devices=None):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.pop("XLA_FLAGS", None)
+    if devices is not None:
+        env["REPRO_CHECK_DEVICES"] = str(devices)
     proc = subprocess.run(
         [sys.executable, "-m", module, *args],
         capture_output=True,
@@ -43,8 +45,13 @@ def test_strategy_forward_all():
 
 
 @pytest.mark.slow
-def test_strategy_gradients():
-    _run_check("repro.testing.strategy_check", "gradients")
+@pytest.mark.parametrize("devices", [4, 8])
+def test_strategy_gradients(devices):
+    """jax.grad of every registered SP strategy (tokenring bidir + faithful,
+    ring, ring_bidir, ulysses, window) vs the ref.py oracle on fake devices,
+    through the tile-skipped flash backward."""
+    out = _run_check("repro.testing.strategy_check", "gradients", devices=devices)
+    assert out.count("PASS gradients") >= 6
 
 
 @pytest.mark.slow
