@@ -1,12 +1,17 @@
-"""Serving benchmark: chunked prefill TTFT / decode throughput + the
-planner's per-schedule link-byte table.
+"""Serving benchmark: chunked prefill TTFT / decode throughput, the paged
+KV cache's memory high-water, and the planner's per-schedule link-byte table.
 
-Two sections:
+Three sections:
 
   * **measured** (reduced model, CPU): the continuous-batching engine serves
     a long prompt while short requests decode.  The chunk-size sweep shows
     prefill step count dropping from ``O(prompt)`` (token-by-token, chunk=1)
     to ``O(prompt/chunk)``, with TTFT and decode tokens/s alongside.
+  * **paged vs dense** (reduced model, CPU): the same workload through the
+    dense per-slot slab and the paged pool (``serving/kv_cache.py``) at a
+    page-size sweep — KV-cache bytes pinned (dense worst case vs the
+    allocator's high-water mark) and TTFT side by side, plus a prompt
+    *longer than the dense slab* served through the paged path.
   * **modeled** (planner cost models): per-schedule link bytes for a
     production GQA shape — the registered ``decode`` / ``prefill``
     (cache-resident psum) rows against what circulating schedules
@@ -75,6 +80,84 @@ def measured(chunks=(1, 8, 32), prompt_len=96, max_new=8):
         rows.append((f"serving/chunk{chunk}/decode_tps", tps, "tok/s"))
     print(f"(prefill steps = ceil({prompt_len - 1}/chunk): O(prompt/chunk), "
           f"not the O(prompt) decode steps of token-by-token filling)")
+    return rows
+
+
+def paged_vs_dense(prompt_len=96, max_new=8, page_sizes=(8, 32)):
+    """Same workload through the dense slab and the paged pool: cache bytes
+    pinned (dense worst case vs allocator high-water) and TTFT.
+
+    The paged pool is sized at half the dense slot-token count — the whole
+    point is that admission is by pages actually needed, not by worst case —
+    and a final request *longer than the dense slab* is served through the
+    paged path (the dense engine rejects it at submit)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import ARCHS
+    from repro.core.api import ParallelContext
+    from repro.models import build_model
+    from repro.serving.engine import ServingEngine
+    from repro.serving.kv_cache import dense_cache_bytes, paged_cache_bytes
+
+    cfg = ARCHS["qwen3-1.7b"].reduced(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_head=32, d_ff=128,
+        vocab_size=97,
+    )
+    bundle = build_model(cfg, ParallelContext(mesh=None, impl="xla"))
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    long_prompt = rng.integers(1, cfg.vocab_size, prompt_len)
+    max_batch, max_len = 3, 2 * prompt_len
+
+    def serve(**kw):
+        eng = ServingEngine(
+            bundle, params, max_batch=max_batch, max_len=max_len,
+            prefill_chunk=32, **kw,
+        )
+        eng.submit([3, 9], max_new_tokens=max_new)
+        eng.submit([5, 11], max_new_tokens=max_new)
+        req = eng.submit(long_prompt, max_new_tokens=max_new)
+        eng.run()
+        return eng, (req.t_first - req.t_submit) * 1e3
+
+    print(f"\n### paged vs dense: {prompt_len}-token prompt + 2 decode "
+          f"streams (reduced {cfg.name}, CPU, {max_batch} slots x "
+          f"{max_len}-token capacity)")
+    print("| cache | KV bytes pinned | ttft (ms) | preemptions |")
+    print("|---|---|---|---|")
+    rows = []
+    _, ttft = serve()
+    dense_b = dense_cache_bytes(cfg, max_batch, max_len)
+    print(f"| dense slab | {dense_b} | {ttft:.0f} | - |")
+    rows.append(("serving_paged/dense_bytes", float(dense_b), "B"))
+    for ps in page_sizes:
+        # half the dense slot-token budget, shared across all slots
+        pool = max_batch * max_len // (2 * ps)
+        eng, ttft = serve(page_size=ps, max_pages=pool)
+        hw = eng.stats()["pages"]["high_water"]
+        paged_b = paged_cache_bytes(cfg, hw, ps)
+        print(f"| paged ps={ps} ({pool} pages) | {paged_b} | {ttft:.0f} "
+              f"| {eng.stats()['preemptions']} |")
+        assert paged_b < dense_b, (
+            f"paged high-water {paged_b} B must undercut the dense slab "
+            f"{dense_b} B"
+        )
+        rows.append((f"serving_paged/ps{ps}_bytes", float(paged_b), "B"))
+        rows.append((f"serving_paged/ps{ps}_ttft", ttft * 1e3, "us"))
+    # a prompt the dense slab cannot hold at all: logical capacity is
+    # per-slot pages, physical memory is the (smaller) pool
+    over = rng.integers(1, cfg.vocab_size, max_len + 16)
+    eng = ServingEngine(
+        bundle, params, max_batch=max_batch, max_len=2 * max_len,
+        prefill_chunk=32, page_size=32, max_pages=max_batch * max_len // 64,
+    )
+    req = eng.submit(over, max_new_tokens=4)
+    eng.run()
+    assert len(req.output) == 4, req.output
+    print(f"paged served a {over.size}-token prompt through a "
+          f"{eng.max_pages * 32}-token pool — the {max_len}-token dense slab "
+          f"rejects it at submit")
     return rows
 
 
@@ -155,6 +238,7 @@ def modeled(B=1, prompt=32768, chunk=256, Hq=64, Hkv=8, D=128, P=4, b=2):
 def run():
     rows = modeled()
     rows += measured()
+    rows += paged_vs_dense()
     return rows
 
 

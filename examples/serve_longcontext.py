@@ -4,7 +4,9 @@ TokenRing's serving premise: the KV cache never moves.  This example serves a
 small model with batched requests through the continuous-batching engine —
 prompts prefill in fixed-size chunks (``prefill_chunk``) through the fused
 chunk step while other slots keep decoding, under a per-iteration
-``token_budget`` — then demonstrates the sequence-parallel decode path
+``token_budget`` — repeats the workload on the paged KV cache (a shared page
+pool instead of per-slot slabs, serving a prompt longer than the dense slab
+in half its memory), then demonstrates the sequence-parallel decode path
 (sharded cache + 1-token Q + lse-merge) directly on a long cache.
 
     PYTHONPATH=src python examples/serve_longcontext.py
@@ -54,6 +56,32 @@ def main():
         f"  {s['decode_steps']} decode steps + {s['prefill_steps']} prefill "
         f"chunk steps for {s['prefill_tokens']} prompt tokens "
         f"(vs {s['prefill_tokens']} decode steps token-by-token)"
+    )
+
+    # --- paged KV cache: pool instead of per-slot slabs -------------------
+    # Same engine, page-pool storage (serving/kv_cache.py): admission by
+    # free pages, page-granular growth, preemption when the pool runs dry.
+    # The pool is half the dense slot-token budget, yet serves a prompt
+    # *longer* than the dense slab above could even admit.
+    from repro.serving.kv_cache import dense_cache_bytes, paged_cache_bytes
+
+    eng = ServingEngine(
+        bundle, params, max_batch=4, max_len=512,
+        prefill_chunk=16, token_budget=24, page_size=16, max_pages=32,
+    )
+    for _ in range(6):
+        plen = int(rng.integers(4, 12))
+        eng.submit(rng.integers(0, cfg.vocab_size, plen), max_new_tokens=16)
+    eng.submit(rng.integers(0, cfg.vocab_size, 300), max_new_tokens=16)
+    eng.run()
+    s = eng.stats()
+    print(
+        f"paged serving: {s['requests']} requests, "
+        f"{s['pages']['high_water']}/{s['pages']['pages_total']} pages "
+        f"high-water ({paged_cache_bytes(cfg, s['pages']['high_water'], 16)} B"
+        f" vs {dense_cache_bytes(cfg, 4, 512)} B dense), "
+        f"{s['preemptions']} preemptions — including a 300-token prompt the "
+        f"256-token dense slab above rejects"
     )
 
     # --- long-context decode: cache grows, per-token cost stays flat ------

@@ -332,9 +332,16 @@ class ParallelContext:
             sp_axes=self.sp_axes, sp_degree=P_sp, cost=cost,
         )
 
-    def _serving_cost(self, name: str, shapes: AttnShapes | None) -> CommCost | None:
+    def _serving_cost(
+        self, name: str, shapes: AttnShapes | None,
+        table_pages: int | None = None,
+    ) -> CommCost | None:
         """Price a registered serving-side schedule for these shapes (the
-        same ``comm_cost`` machinery training plans go through)."""
+        same ``comm_cost`` machinery training plans go through).
+
+        ``table_pages`` (per-slot block-table width) adds the paged-cache
+        metadata term — see ``decode_comm_cost`` in ``core/decode.py``.
+        """
         if shapes is None:
             return None
         B_loc = shapes.B
@@ -344,6 +351,7 @@ class ParallelContext:
             get_strategy(name), B_loc, shapes.Sq, shapes.Hq, shapes.Hkv,
             shapes.D, self.sp_degree, bytes_per_elem=shapes.dtype_bytes,
             bidir_links=self.bidir_links, S_kv=shapes.seq_kv,
+            table_pages=table_pages,
         )
 
     def plan_decode(
@@ -352,6 +360,7 @@ class ParallelContext:
         window: int | None = None,
         scale: float | None = None,
         shapes: AttnShapes | None = None,
+        table_pages: int | None = None,
     ) -> ExecutionPlan:
         """Decode plan: tiny replicated Q against the sequence-sharded cache.
 
@@ -359,6 +368,8 @@ class ParallelContext:
         (``Sq`` = query tokens per step, ``Sk`` = cache capacity) the plan
         carries its modeled per-step link bytes — ``B*Sq*Hq*(D+2)`` fp32
         scalars through a ring all-reduce, independent of the cache length.
+        ``table_pages`` prices the paged cache's per-step block-table
+        broadcast on top (the K/V pages themselves still never move).
         """
         desc = get_strategy("decode")
         self._validate_axes()
@@ -379,7 +390,8 @@ class ParallelContext:
             kind="decode", strategy="decode", inner=None, mesh=self.mesh,
             in_specs=(qspec, cspec, cspec, P(dp, seq), P(dp, None)),
             out_specs=qspec, local_fn=local_fn, sp_axes=self.sp_axes,
-            sp_degree=self.sp_degree, cost=self._serving_cost("decode", shapes),
+            sp_degree=self.sp_degree,
+            cost=self._serving_cost("decode", shapes, table_pages),
         )
 
     def plan_prefill(
@@ -388,6 +400,7 @@ class ParallelContext:
         window: int | None = None,
         scale: float | None = None,
         shapes: AttnShapes | None = None,
+        table_pages: int | None = None,
     ) -> ExecutionPlan:
         """Chunked-prefill plan: a replicated prompt chunk against the
         resident sharded cache plus its own local block (cross-chunk
@@ -395,7 +408,8 @@ class ParallelContext:
 
         Binds the registered ``"prefill"`` serving strategy; with ``shapes``
         (``Sq`` = chunk length, ``Sk`` = cache capacity) the plan carries the
-        modeled per-chunk link bytes.
+        modeled per-chunk link bytes (plus the paged block-table term when
+        ``table_pages`` is given).
         """
         desc = get_strategy("prefill")
         self._validate_axes()
@@ -421,7 +435,8 @@ class ParallelContext:
                 P(dp, None),                       # q_pos
             ),
             out_specs=qspec, local_fn=local_fn, sp_axes=self.sp_axes,
-            sp_degree=self.sp_degree, cost=self._serving_cost("prefill", shapes),
+            sp_degree=self.sp_degree,
+            cost=self._serving_cost("prefill", shapes, table_pages),
         )
 
     def plan_scan(self, *, ndim: int, axis: int = 1) -> ExecutionPlan:
@@ -545,12 +560,15 @@ def sp_decode(
     pctx: ParallelContext,
     window: int | None = None,
     scale: float | None = None,
+    table_pages: int | None = None,
 ):
     """Sequence-parallel decode: tiny Q replicated, cache stays sharded.
 
     ``q (B,Sq,Hq,D)`` (Sq small), caches ``(B,Skv,Hkv,D)`` sharded over the SP
     axes on dim 1, ``k_pos (B,Skv)`` (PAD_POS sentinel for unwritten slots),
     ``q_pos (B,Sq)`` — per-request rows support continuous batching.
+    ``table_pages``: block-table width when the cache arrays are gathered
+    page views (paged serving) — priced into the plan's cost term.
     """
     from repro.kernels.ops import flash_attention
     from repro.kernels.ref import normalize_positions
@@ -570,7 +588,9 @@ def sp_decode(
         B=B, Sq=q.shape[1], Hq=q.shape[2], Hkv=k_cache.shape[2], D=q.shape[3],
         Sk=k_cache.shape[1], dtype_bytes=jnp.dtype(q.dtype).itemsize,
     )
-    plan = pctx.plan_decode(window=window, scale=scale, shapes=shapes)
+    plan = pctx.plan_decode(
+        window=window, scale=scale, shapes=shapes, table_pages=table_pages
+    )
     return plan(q, k_cache, v_cache, k_pos, q_pos)
 
 
@@ -587,6 +607,7 @@ def sp_prefill(
     pctx: ParallelContext,
     window: int | None = None,
     scale: float | None = None,
+    table_pages: int | None = None,
 ):
     """Sequence-parallel chunked-prefill attention on global arrays.
 
@@ -617,7 +638,9 @@ def sp_prefill(
         B=B, Sq=C, Hq=q.shape[2], Hkv=k_cache.shape[2], D=q.shape[3],
         Sk=k_cache.shape[1], dtype_bytes=jnp.dtype(q.dtype).itemsize,
     )
-    plan = pctx.plan_prefill(window=window, scale=scale, shapes=shapes)
+    plan = pctx.plan_prefill(
+        window=window, scale=scale, shapes=shapes, table_pages=table_pages
+    )
     return plan(q, k_new, v_new, new_pos, k_cache, v_cache, k_pos, q_pos)
 
 

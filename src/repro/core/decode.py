@@ -181,7 +181,8 @@ _MERGE_BYTES = 4
 
 
 def decode_comm_cost(
-    B, S, Hq, Hkv, D, P, *, bytes_per_elem=2, bidir_links=True, S_kv=None, **_,
+    B, S, Hq, Hkv, D, P, *, bytes_per_elem=2, bidir_links=True, S_kv=None,
+    table_pages=None, **_,
 ):
     """Resident-cache decode: one lse-weighted all-reduce of the partials.
 
@@ -190,16 +191,27 @@ def decode_comm_cost(
     pmax of lse ``(1)``.  A bidirectional-ring all-reduce moves
     ``(P-1)/P x payload`` per device per direction.  Independent of the cache
     length ``S_kv`` — the whole point of keeping KV resident.
+
+    ``table_pages`` prices the *paged* cache (``serving/kv_cache.py``): each
+    step the per-slot block tables (``B * table_pages`` int32 entries) must be
+    coherent on every device so each shard gathers its owned pages — priced
+    conservatively as a per-step broadcast through the same ring (in practice
+    tables change only at page granularity, so this is an upper bound).  The
+    page *data* still never moves: paging changes where the resident cache
+    lives, not what travels.
     """
     if P <= 1:
         return CommCost(0.0, 0.0)
     payload = B * S * Hq * (D + 2) * _MERGE_BYTES
+    if table_pages:
+        payload += B * table_pages * 4  # int32 block-table row broadcast
     per_dir = (P - 1) / P * payload
     return CommCost(per_dir, per_dir)
 
 
 def prefill_comm_cost(
-    B, S, Hq, Hkv, D, P, *, bytes_per_elem=2, bidir_links=True, S_kv=None, **_,
+    B, S, Hq, Hkv, D, P, *, bytes_per_elem=2, bidir_links=True, S_kv=None,
+    table_pages=None, **_,
 ):
     """Chunk-resident prefill: the decode psum evaluated at ``S`` chunk rows.
 
@@ -209,12 +221,13 @@ def prefill_comm_cost(
     cost scales with the *cache* length, i.e. ``O(S_kv)`` per chunk and
     ``O(S_kv^2 / chunk)`` per prompt — the gap ``bench_serving.py`` tabulates.
 
-    The byte arithmetic IS the decode model (same psum, ``S`` query rows) —
-    delegated so the two cannot drift apart.
+    The byte arithmetic IS the decode model (same psum, ``S`` query rows;
+    ``table_pages`` adds the paged block-table broadcast term) — delegated so
+    the two cannot drift apart.
     """
     return decode_comm_cost(
         B, S, Hq, Hkv, D, P, bytes_per_elem=bytes_per_elem,
-        bidir_links=bidir_links, S_kv=S_kv,
+        bidir_links=bidir_links, S_kv=S_kv, table_pages=table_pages,
     )
 
 
@@ -226,6 +239,7 @@ register_strategy(
     kv_resident=True,
     auto_eligible=False,
     supports_window=True,
+    extra_kwargs=frozenset({"table_pages"}),
     description="serving decode: replicated 1-token Q, resident sharded "
     "cache, lse-weighted psum merge",
 )
@@ -238,6 +252,7 @@ register_strategy(
     kv_resident=True,
     auto_eligible=False,
     supports_window=True,
+    extra_kwargs=frozenset({"table_pages"}),
     description="serving chunked prefill: replicated C-token chunk vs "
     "resident cache + local chunk block, merged via Update()",
 )

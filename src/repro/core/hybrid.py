@@ -62,9 +62,17 @@ def hybrid_sp(
         raise ValueError(
             f"strategy {inner!r} cannot run inside the Case-Study-III hybrid"
         )
+    # A misspelled extra (e.g. ``travle_dtype``) must fail loudly, not be
+    # silently dropped while the schedule runs at its default.
+    unknown = set(inner_kwargs) - set(desc.extra_kwargs)
+    if unknown:
+        raise ValueError(
+            f"unknown inner_kwargs {sorted(unknown)} for hybrid inner "
+            f"strategy {inner!r}; accepted extras: "
+            f"{sorted(desc.extra_kwargs) or 'none'}"
+        )
     n_pods = lax.psum(1, pod_axis)
     inner_fn = desc.fn
-    inner_kwargs = {k: v for k, v in inner_kwargs.items() if k in desc.extra_kwargs}
 
     def inner_pass(k_cur, v_cur, kp_cur):
         return inner_fn(

@@ -8,9 +8,15 @@ prints their planner-modeled per-step link bytes for the served config next
 to the measured throughput (the serving analog of ``launch/dryrun``'s plan
 record).
 
-Example (CPU, reduced model, 16 batched requests):
+``--page-size`` switches the KV cache from dense per-slot slabs to the
+paged pool (``serving/kv_cache.py``): admission by free pages, page-granular
+decode growth, and (``--preempt``) recompute-style eviction when
+``--max-pages`` runs dry — see docs/serving.md §6.
+
+Example (CPU, reduced model, 16 batched requests, paged):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-      --requests 16 --max-new 24 --prefill-chunk 16 --token-budget 32
+      --requests 16 --max-new 24 --prefill-chunk 16 --token-budget 32 \
+      --page-size 16 --max-pages 24
 """
 
 from __future__ import annotations
@@ -29,13 +35,17 @@ from repro.serving.engine import ServingEngine
 
 
 def print_serving_plan(cfg, *, max_batch: int, chunk: int, max_len: int,
-                       sp_degree: int = 4):
+                       sp_degree: int = 4, page_size: int | None = None):
     """Planner view of the serving schedules for this config: modeled
     per-step link bytes at an SP degree of ``sp_degree`` (the same
     ``comm_cost`` models ``plan_decode`` / ``plan_prefill`` attach to real
-    multi-device plans)."""
+    multi-device plans).  With ``page_size`` the paged block-table term
+    rides along (``table_pages = ceil(max_len / page_size)``)."""
+    from repro.serving.kv_cache import pages_for
+
     bpe = 2 if cfg.dtype == "bfloat16" else 4
-    common = dict(bytes_per_elem=bpe, S_kv=max_len)
+    table_pages = pages_for(max_len, page_size) if page_size else None
+    common = dict(bytes_per_elem=bpe, S_kv=max_len, table_pages=table_pages)
     dec = strategy_cost(
         get_strategy("decode"), max_batch, 1, cfg.n_heads, cfg.n_kv_heads,
         cfg.head_dim, sp_degree, **common,
@@ -44,10 +54,14 @@ def print_serving_plan(cfg, *, max_batch: int, chunk: int, max_len: int,
         get_strategy("prefill"), 1, chunk, cfg.n_heads, cfg.n_kv_heads,
         cfg.head_dim, sp_degree, **common,
     )
+    paged = (
+        f" (paged: +{table_pages}-entry block table/slot)" if page_size else ""
+    )
     print(
         f"serving plan @ SP={sp_degree}: decode {dec.max_direction:.0f} B/step "
         f"(batch {max_batch}), prefill {pre.max_direction:.0f} B/chunk "
         f"(chunk {chunk}) — cache-resident, independent of context length"
+        f"{paged}"
     )
 
 
@@ -65,6 +79,17 @@ def main(argv=None):
                     help="prefill tokens per iteration are capped at this "
                     "minus the number of decoding slots (decode itself is "
                     "indivisible: one token per decoding slot either way)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="enable the paged KV cache with this many tokens "
+                    "per page (default: dense per-slot slab)")
+    ap.add_argument("--max-pages", type=int, default=None,
+                    help="page-pool size; defaults to the dense-equivalent "
+                    "max_batch * ceil(max_len/page_size) — size it below "
+                    "that to stop pinning worst-case memory")
+    ap.add_argument("--preempt", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="evict the newest request (recompute-style) when "
+                    "the page pool runs dry instead of raising")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -78,12 +103,14 @@ def main(argv=None):
 
     print_serving_plan(
         cfg, max_batch=args.max_batch, chunk=args.prefill_chunk,
-        max_len=args.max_len,
+        max_len=args.max_len, page_size=args.page_size,
     )
     eng = ServingEngine(
         bundle, params, max_batch=args.max_batch, max_len=args.max_len,
         temperature=args.temperature, seed=args.seed,
         prefill_chunk=args.prefill_chunk, token_budget=args.token_budget,
+        page_size=args.page_size, max_pages=args.max_pages,
+        preempt=args.preempt,
     )
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -103,6 +130,12 @@ def main(argv=None):
         f"steps: {s['decode_steps']} decode, {s['prefill_steps']} prefill "
         f"chunks ({s['prefill_tokens']} prompt tokens)"
     )
+    if "pages" in s:
+        u = s["pages"]
+        print(
+            f"pages: {u['high_water']}/{u['pages_total']} high-water "
+            f"(x{args.page_size} tokens), {s['preemptions']} preemptions"
+        )
     for r in done[:3]:
         print(f"  req {r.uid}: prompt {r.prompt.tolist()} -> {r.output}")
     return s

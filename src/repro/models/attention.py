@@ -1,12 +1,18 @@
 """Model-level attention layer: projections + RoPE + SP attention core.
 
-Four entry points sharing one parameter set:
+Entry points sharing one parameter set:
   * ``attention``        — training / one-shot prefill self-attention
                            (optionally filling a KV cache),
   * ``attention_prefill_chunk`` — a C-token prompt chunk against the resident
                            cache (serving chunked prefill; writes the chunk's
                            K/V into per-request cache regions),
   * ``attention_decode`` — single-token decode against a sharded cache,
+  * ``attention_decode_paged`` / ``attention_prefill_chunk_paged`` — the same
+                           two serving steps against the paged page pool
+                           (``serving/kv_cache.py``): scatter into owned
+                           pages, gather the block-table view, and run the
+                           identical SP attention — a paged read is
+                           numerically the dense read,
   * ``cross_attention``  — encoder-decoder cross attention (resident KV =
                            TokenRing's natural fit).
 """
@@ -17,13 +23,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import ParallelContext, sp_attention, sp_decode, sp_prefill
-from repro.models.layers import apply_norm, apply_rope, dense, dense_init, norm_init
+from repro.models.layers import (
+    apply_norm,
+    apply_rope,
+    constrain,
+    dense,
+    dense_init,
+    norm_init,
+)
 
 __all__ = [
     "attention_init",
     "attention",
     "attention_prefill_chunk",
+    "attention_prefill_chunk_paged",
     "attention_decode",
+    "attention_decode_paged",
     "cross_attention",
 ]
 
@@ -171,6 +186,97 @@ def attention_decode(
     out = sp_decode(q, kc, vc, pos_cache, positions, pctx=pctx, window=window)
     y = dense(p["wo"], out.reshape(B, S, -1), jnp.dtype(cfg.dtype))
     return y, kc, vc
+
+
+def _view_spec(pctx):
+    """Spec of a gathered page view: the same (data, seq) layout as a dense
+    cache, so the decode/prefill plans shard it identically."""
+    return (pctx.data_axis, pctx.seq_spec(), None, None)
+
+
+def attention_decode_paged(
+    p,
+    x,
+    positions,
+    k_pool,
+    v_pool,
+    pos_view,
+    flat_view,
+    write_page,
+    write_off,
+    *,
+    cfg,
+    pctx: ParallelContext,
+    window: int | None = None,
+    rope: bool = True,
+    table_pages: int | None = None,
+):
+    """Paged decode step: ``x (B,1,d)``; pools ``(n_pages,ps,Hkv,D)``.
+
+    ``pos_view (B, W*ps)`` / ``flat_view (B, W*ps)`` are the slot's gathered
+    position view and flat token indices (``serving/kv_cache.py``), shared
+    across layers.  ``write_page``/``write_off (B,)`` locate the new token's
+    physical slot (``n_pages`` sentinel drops skipped rows).  The new K/V
+    scatter into the pool first, then the block-table view is gathered and
+    fed to the *same* ``sp_decode`` as the dense path — identical math,
+    page-indirect storage; ``table_pages`` (block-table width) rides into
+    the plan's cost term.  Returns ``(y, k_pool', v_pool')``.
+    """
+    from repro.serving.kv_cache import gather_pages
+
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, positions, cfg, rope=rope, pctx=pctx)
+    kp = k_pool.at[write_page, write_off].set(k[:, 0].astype(k_pool.dtype), mode="drop")
+    vp = v_pool.at[write_page, write_off].set(v[:, 0].astype(v_pool.dtype), mode="drop")
+    k_view = constrain(gather_pages(kp, flat_view), pctx, _view_spec(pctx))
+    v_view = constrain(gather_pages(vp, flat_view), pctx, _view_spec(pctx))
+    out = sp_decode(
+        q, k_view, v_view, pos_view, positions, pctx=pctx, window=window,
+        table_pages=table_pages,
+    )
+    y = dense(p["wo"], out.reshape(B, S, -1), jnp.dtype(cfg.dtype))
+    return y, kp, vp
+
+
+def attention_prefill_chunk_paged(
+    p,
+    x,
+    positions,
+    k_pool,
+    v_pool,
+    old_pos_view,
+    flat_view,
+    write_page,
+    write_off,
+    *,
+    cfg,
+    pctx: ParallelContext,
+    window: int | None = None,
+    rope: bool = True,
+    table_pages: int | None = None,
+):
+    """Paged chunked-prefill step: ``x (B,C,d)`` against the gathered view.
+
+    ``old_pos_view`` is gathered from the *pre-chunk* position pool so the
+    resident partial can never see the chunk's own slots (they are attended
+    locally inside ``sp_prefill``); the chunk's K/V scatter into the owned
+    pages afterwards.  ``write_page``/``write_off (B,C)`` carry the drop
+    sentinel for invalid tokens.  Returns ``(y, k_pool', v_pool')``.
+    """
+    from repro.serving.kv_cache import gather_pages
+
+    B, C, _ = x.shape
+    q, k, v = _project_qkv(p, x, positions, cfg, rope=rope, pctx=pctx)
+    k_view = constrain(gather_pages(k_pool, flat_view), pctx, _view_spec(pctx))
+    v_view = constrain(gather_pages(v_pool, flat_view), pctx, _view_spec(pctx))
+    out = sp_prefill(
+        q, k, v, positions, k_view, v_view, old_pos_view, positions,
+        pctx=pctx, window=window, table_pages=table_pages,
+    )
+    kp = k_pool.at[write_page, write_off].set(k.astype(k_pool.dtype), mode="drop")
+    vp = v_pool.at[write_page, write_off].set(v.astype(v_pool.dtype), mode="drop")
+    y = dense(p["wo"], out.reshape(B, C, -1), jnp.dtype(cfg.dtype))
+    return y, kp, vp
 
 
 def cross_attention(

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
+    "constrain",
     "dense_init",
     "dense",
     "norm_init",
@@ -29,6 +30,17 @@ __all__ = [
 
 def _dtype(name: str):
     return jnp.dtype(name)
+
+
+def constrain(x, pctx, spec_entries):
+    """Sharding constraint helper (no-op without a mesh)."""
+    if pctx is None or pctx.mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pctx.mesh, P(*spec_entries))
+    )
 
 
 # ---------------------------------------------------------------------------

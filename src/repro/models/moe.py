@@ -19,19 +19,11 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
 from repro.core.compat import shard_map
 
-from repro.models.layers import dense_init, mlp, mlp_init
+from repro.models.layers import constrain as _constrain, dense_init, mlp, mlp_init
 
 __all__ = ["moe_init", "moe_ffn"]
-
-
-def _constrain(x, pctx, entries):
-    if pctx is None or pctx.mesh is None:
-        return x
-    return jax.lax.with_sharding_constraint(x, NamedSharding(pctx.mesh, P(*entries)))
 
 
 def moe_init(key, cfg):

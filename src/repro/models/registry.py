@@ -40,6 +40,13 @@ class ModelBundle:
     # cache filling in the serving engine — only sound when
     # ``decode_rollback_safe`` is set.
     prefill_chunk: Callable[..., Any] | None = None
+    # Paged serving (serving/kv_cache.py page pool): same contracts as
+    # ``decode_step`` / ``prefill_chunk`` but against the paged state built by
+    # ``init_paged_state(n_pages, page_size, max_batch, slot_pages)``.
+    # Families without them serve through the dense slab only.
+    decode_step_paged: Callable[..., Any] | None = None
+    prefill_chunk_paged: Callable[..., Any] | None = None
+    init_paged_state: Callable[..., Any] | None = None
     # Whether the serve state is cache-style (per-slot ``len``/``pos``
     # bookkeeping, position-masked):  the engine's token-by-token fallback
     # prefill feeds dummy tokens to other rows and rolls back only ``len``,
@@ -86,6 +93,16 @@ def build_model(cfg: ArchConfig, pctx: ParallelContext) -> ModelBundle:
             ),
             prefill_chunk=lambda params, tok, state, n_valid: T.lm_prefill_chunk(
                 params, tok, state, n_valid, cfg=cfg, pctx=pctx
+            ),
+            decode_step_paged=lambda params, tok, state, active=None: T.lm_decode_step_paged(
+                params, tok, state, active, cfg=cfg, pctx=pctx
+            ),
+            prefill_chunk_paged=lambda params, tok, state, n_valid: T.lm_prefill_chunk_paged(
+                params, tok, state, n_valid, cfg=cfg, pctx=pctx
+            ),
+            init_paged_state=lambda n_pages, page_size, max_batch, slot_pages: T.init_paged_decode_cache(
+                cfg, n_pages=n_pages, page_size=page_size,
+                max_batch=max_batch, slot_pages=slot_pages, pctx=pctx
             ),
             decode_rollback_safe=True,
         )

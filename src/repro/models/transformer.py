@@ -22,17 +22,18 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
 from repro.core.api import ParallelContext
 from repro.models.attention import (
     attention,
     attention_decode,
+    attention_decode_paged,
     attention_init,
     attention_prefill_chunk,
+    attention_prefill_chunk_paged,
 )
 from repro.models.layers import (
     apply_norm,
+    constrain,
     lm_cross_entropy,
     dense,
     dense_init,
@@ -49,19 +50,13 @@ __all__ = [
     "lm_loss",
     "lm_prefill",
     "lm_prefill_chunk",
+    "lm_prefill_chunk_paged",
     "lm_decode_step",
+    "lm_decode_step_paged",
     "init_decode_cache",
+    "init_paged_decode_cache",
     "constrain",
 ]
-
-
-def constrain(x, pctx: ParallelContext, spec_entries):
-    """Sharding constraint helper (no-op without a mesh)."""
-    if pctx.mesh is None:
-        return x
-    return jax.lax.with_sharding_constraint(
-        x, NamedSharding(pctx.mesh, P(*spec_entries))
-    )
 
 
 def _act_spec(pctx):
@@ -333,6 +328,146 @@ def lm_prefill_chunk(params, token_ids, cache, n_valid, *, cfg, pctx):
             positions, mode="drop"
         ),
         "len": length + n_valid.astype(length.dtype),
+    }
+    return logits, new_cache
+
+
+def init_paged_decode_cache(
+    cfg, *, n_pages: int, page_size: int, max_batch: int, slot_pages: int,
+    pctx=None, dtype=None,
+):
+    """Page-pool serve state (see ``serving/kv_cache.py`` for the layout).
+
+    Physical memory is ``n_pages * page_size`` tokens shared by every slot;
+    each slot's logical capacity is ``slot_pages * page_size``.  Under a mesh
+    the page dimension shards over the SP axes, so block tables wider than
+    one device's page budget stripe the prompt across the ring.
+    """
+    from repro.serving.kv_cache import init_paged_cache
+
+    return init_paged_cache(
+        cfg.n_layers, cfg.n_kv_heads, cfg.head_dim, n_pages=n_pages,
+        page_size=page_size, max_batch=max_batch, slot_pages=slot_pages,
+        dtype=dtype or cfg.dtype, pctx=pctx,
+    )
+
+
+def lm_prefill_chunk_paged(params, token_ids, cache, n_valid, *, cfg, pctx):
+    """Paged chunked prefill: the page-pool analog of :func:`lm_prefill_chunk`.
+
+    Same contract (``token_ids (B, C)``, ``n_valid (B,)``, skipped rows
+    untouched, logits at each row's last valid position) — only the cache
+    layout differs: row ``b``'s valid tokens land in the pages its block
+    table maps for logical slots ``[len_b, len_b + n_valid_b)``.  The engine
+    guarantees those table entries are mapped before calling (admission
+    allocates prompt pages); unmapped entries drop the write and mask the
+    read, so a bookkeeping bug degrades to masked garbage, never to a write
+    on someone else's page.
+    """
+    from repro.serving.kv_cache import gather_positions, view_indices, write_coords
+
+    B, C = token_ids.shape
+    n_pages, page_size = cache["pos"].shape
+    bt = cache["block_tables"]
+    length = cache["len"]  # (B,)
+    offs = jnp.arange(C, dtype=jnp.int32)[None, :]
+    positions = length[:, None].astype(jnp.int32) + offs  # (B, C)
+    valid = offs < n_valid[:, None]
+    write_page, write_off = write_coords(
+        bt, positions, valid, n_pages, page_size
+    )
+    flat_view = view_indices(bt, page_size)
+    # Pre-chunk position view: the resident partial must not see the chunk's
+    # own slots (they are attended locally, pre-write).
+    old_pos_view = gather_positions(cache["pos"], flat_view)
+    x = params["embed"]["table"][token_ids].astype(jnp.dtype(cfg.dtype))
+
+    def body(x, xs):
+        p_l, kc_l, vc_l = xs
+        h = apply_norm(p_l["ln1"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        y, kc_l, vc_l = attention_prefill_chunk_paged(
+            p_l["attn"], h, positions, kc_l, vc_l, old_pos_view, flat_view,
+            write_page, write_off, cfg=cfg, pctx=pctx, window=cfg.window,
+            table_pages=bt.shape[1],
+        )
+        x = x + y
+        h = apply_norm(p_l["ln2"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = moe_ffn(p_l["moe"], h, cfg, pctx)
+        else:
+            y = mlp(p_l["mlp"], h, mlp_type=cfg.mlp_type, compute_dtype=jnp.dtype(cfg.dtype))
+        return x + y, (kc_l, vc_l)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(params["final_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    last_idx = jnp.clip(n_valid - 1, 0, C - 1)
+    last = x[jnp.arange(B), last_idx]
+    logits = jnp.einsum(
+        "bd,dv->bv", last.astype(jnp.dtype(cfg.dtype)),
+        _lm_head_w(params, cfg).astype(jnp.dtype(cfg.dtype)),
+    )
+    new_cache = {
+        "k": ks,
+        "v": vs,
+        "pos": cache["pos"].at[write_page, write_off].set(positions, mode="drop"),
+        "block_tables": bt,
+        "len": length + n_valid.astype(length.dtype),
+    }
+    return logits, new_cache
+
+
+def lm_decode_step_paged(params, token_ids, cache, active=None, *, cfg, pctx):
+    """Paged decode step: the page-pool analog of :func:`lm_decode_step`.
+
+    Identical contract (``token_ids (B,)`` -> ``logits (B, V)``, ``active``
+    rows only); the new token's K/V land at the physical ``(page, offset)``
+    its block table maps for logical slot ``len[b]``.
+    """
+    from repro.serving.kv_cache import gather_positions, view_indices, write_coords
+
+    B = token_ids.shape[0]
+    n_pages, page_size = cache["pos"].shape
+    bt = cache["block_tables"]
+    length = cache["len"]  # (B,)
+    if active is None:
+        valid = jnp.ones((B,), bool)
+        new_len = length + 1
+    else:
+        valid = active
+        new_len = jnp.where(active, length + 1, length)
+    write_page, write_off = write_coords(bt, length, valid, n_pages, page_size)
+    positions = length[:, None].astype(jnp.int32)  # global pos == length
+    pos_pool = cache["pos"].at[write_page, write_off].set(
+        positions[:, 0], mode="drop"
+    )
+    flat_view = view_indices(bt, page_size)
+    pos_view = gather_positions(pos_pool, flat_view)  # includes the new token
+    x = params["embed"]["table"][token_ids[:, None]].astype(jnp.dtype(cfg.dtype))
+
+    def body(x, xs):
+        p_l, kc_l, vc_l = xs
+        h = apply_norm(p_l["ln1"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        y, kc_l, vc_l = attention_decode_paged(
+            p_l["attn"], h, positions, kc_l, vc_l, pos_view, flat_view,
+            write_page, write_off, cfg=cfg, pctx=pctx, window=cfg.window,
+            table_pages=bt.shape[1],
+        )
+        x = x + y
+        h = apply_norm(p_l["ln2"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = moe_ffn(p_l["moe"], h, cfg, pctx)
+        else:
+            y = mlp(p_l["mlp"], h, mlp_type=cfg.mlp_type, compute_dtype=jnp.dtype(cfg.dtype))
+        return x + y, (kc_l, vc_l)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(params["final_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(jnp.dtype(cfg.dtype)),
+        _lm_head_w(params, cfg).astype(jnp.dtype(cfg.dtype)),
+    )[:, 0]
+    new_cache = {
+        "k": ks, "v": vs, "pos": pos_pool, "block_tables": bt, "len": new_len,
     }
     return logits, new_cache
 

@@ -1,4 +1,4 @@
-"""Batched serving engine: continuous batching with chunked prefill.
+"""Batched serving engine: continuous batching, chunked prefill, paged KV.
 
 The TokenRing serving story: the KV cache stays sequence-sharded and
 resident (never moves), prefill runs the chunk-resident SP schedule, decode
@@ -11,16 +11,28 @@ those steps:
     position-based kernel masking);
   * **chunked prefill**: a joining request's prompt is fed through
     ``bundle.prefill_chunk`` in fixed-size chunks (``prefill_chunk`` tokens)
-    that write straight into its slot's cache region — ``O(prompt/chunk)``
-    steps instead of ``O(prompt)`` decode steps — while the other slots keep
+    that write straight into its cache region — ``O(prompt/chunk)`` steps
+    instead of ``O(prompt)`` decode steps — while the other slots keep
     decoding every iteration (no prefill stalls);
   * a **token-budget scheduler**: decoding slots each emit one token per
     iteration (decode is indivisible and never stalls), then prefilling
     slots share the remaining ``token_budget - n_decoding`` tokens FCFS by
     admission order — so the per-iteration total is capped at
-    ``max(token_budget, n_decoding)``.  ``None`` means unmetered: every
-    prefilling slot gets a full chunk per iteration;
-  * greedy or temperature sampling; EOS / max-token stop conditions;
+    ``max(token_budget, n_decoding)``.  ``None`` means unmetered;
+  * a **paged KV cache** (``page_size=``, see ``serving/kv_cache.py`` and
+    docs/serving.md §6): KV lives in fixed-size pages drawn from a shared
+    pool instead of a contiguous ``max_len`` slab per slot.  Admission is
+    gated on free *pages*, not free slots alone; decode grows a request one
+    page at a time; when the pool runs dry the lowest-priority (newest)
+    request is **preempted** — its pages are freed, it re-queues, and it
+    re-prefills from its retained prompt + generated tokens.  Physical
+    memory is ``max_pages * page_size`` tokens total, so a long request no
+    longer pins worst-case memory for every short one, and per-slot logical
+    capacity (``ceil(max_len / page_size)`` pages) can exceed any dense slab
+    you could afford to allocate;
+  * greedy or temperature sampling; EOS / max-token stop conditions (the EOS
+    token is **excluded** from ``output`` and from token throughput — it is
+    counted separately in ``stats()["eos_stops"]``);
   * simple FCFS queue with throughput/latency accounting for the benchmark
     harness (``benchmarks/bench_serving.py``).
 
@@ -34,12 +46,16 @@ advance every row, and recurrent state cannot be rolled back per slot.
 
 from __future__ import annotations
 
+import bisect
 import time
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.flash_attention import PAD_POS
+from repro.serving.kv_cache import PageAllocator, pages_for
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -52,6 +68,7 @@ class Request:
     eos_id: int | None = None
     # filled by the engine:
     output: list = field(default_factory=list)
+    stopped_eos: bool = False  # retired by sampling eos_id (not in output)
     t_submit: float = 0.0
     t_first: float | None = None
     t_done: float | None = None
@@ -61,23 +78,33 @@ class ServingEngine:
     """Continuous-batching engine over a :class:`~repro.models.registry.ModelBundle`.
 
     Knobs:
-      * ``max_batch`` / ``max_len`` — decode slots and per-slot cache length.
+      * ``max_batch`` / ``max_len`` — decode slots and per-slot cache
+        capacity.  Dense mode allocates ``max_batch x max_len`` up front;
+        paged mode rounds ``max_len`` up to ``slot_pages = ceil(max_len /
+        page_size)`` pages of *logical* capacity per slot, while physical
+        memory is the shared pool below.
       * ``prefill_chunk`` — prompt tokens fed per chunked-prefill step (the
         static chunk width; prompt tails ride along as partial chunks, so
-        there is exactly one compilation).  Larger chunks mean fewer steps
-        and better kernel efficiency; smaller chunks interleave more
-        decode work between prompt pieces (lower decode jitter).
+        there is exactly one compilation).
       * ``token_budget`` — meters *prefill*: an iteration grants prefilling
         slots at most ``token_budget - n_decoding`` tokens (FCFS).  Decode is
         indivisible — every decoding slot emits one token per iteration
-        regardless — so the effective per-iteration total is
-        ``max(token_budget, n_decoding)``; size the budget above ``max_batch``
-        for it to be the binding cap.  ``None`` disables metering.
+        regardless.  ``None`` disables metering.
+      * ``page_size`` — enables the paged KV cache (tokens per page).
+        ``None`` keeps the dense per-slot slab.
+      * ``max_pages`` — pool size in pages (paged mode).  Defaults to
+        ``max_batch * slot_pages`` (dense-equivalent worst case); size it
+        *below* that to stop pinning worst-case memory.
+      * ``preempt`` — paged mode: when a decode step cannot allocate a page,
+        evict the newest request (free its pages, re-queue it, re-prefill
+        from its retained tokens) instead of raising.
     """
 
     def __init__(self, bundle, params, *, max_batch: int, max_len: int,
                  temperature: float = 0.0, seed: int = 0,
-                 prefill_chunk: int = 32, token_budget: int | None = None):
+                 prefill_chunk: int = 32, token_budget: int | None = None,
+                 page_size: int | None = None, max_pages: int | None = None,
+                 preempt: bool = True):
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         if token_budget is not None and token_budget < 1:
@@ -90,45 +117,127 @@ class ServingEngine:
         self.prefill_chunk = prefill_chunk
         self.token_budget = token_budget
         self.key = jax.random.PRNGKey(seed)
-        self.state = bundle.init_serve_state(max_batch, max_len)
+        self.preempt = preempt
+
+        self._paged = page_size is not None
+        if self._paged:
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            if (bundle.prefill_chunk_paged is None
+                    or bundle.decode_step_paged is None
+                    or bundle.init_paged_state is None):
+                raise NotImplementedError(
+                    f"family {bundle.cfg.family!r} has no paged serving "
+                    "steps; drop page_size= to serve from the dense slab"
+                )
+            self.page_size = page_size
+            self.slot_pages = pages_for(max_len, page_size)
+            self.cap = self.slot_pages * page_size  # logical per-slot tokens
+            self.max_pages = (
+                max_pages if max_pages is not None
+                else max_batch * self.slot_pages
+            )
+            if self.max_pages < 1:
+                raise ValueError(f"max_pages must be >= 1, got {self.max_pages}")
+            self.NULL = self.max_pages  # unmapped block-table sentinel
+            self.alloc = PageAllocator(self.max_pages)
+            self._bt = np.full((max_batch, self.slot_pages), self.NULL, np.int32)
+            self._bt_dirty = False
+            self.state = bundle.init_paged_state(
+                self.max_pages, page_size, max_batch, self.slot_pages
+            )
+            self._step = jax.jit(bundle.decode_step_paged)
+            self._chunk_step = jax.jit(bundle.prefill_chunk_paged)
+            self._chunked = True
+        else:
+            self.page_size = None
+            self.cap = max_len
+            self.state = bundle.init_serve_state(max_batch, max_len)
+            self._step = jax.jit(bundle.decode_step)
+            self._chunked = bundle.prefill_chunk is not None
+            self._chunk_step = (
+                jax.jit(bundle.prefill_chunk) if self._chunked else None
+            )
+            if not self._chunked and not bundle.decode_rollback_safe:
+                # Recurrent families (ssm / RG-LRU): decode_step advances
+                # every row's hidden state, and there is no cache-style
+                # rollback — the fallback prefill would silently corrupt
+                # concurrent requests.
+                raise NotImplementedError(
+                    f"family {bundle.cfg.family!r} has no chunked prefill and its "
+                    "recurrent serve state cannot be rolled back per slot; "
+                    "batched serving needs masked decode steps for this family"
+                )
+
+        # Slot-reset is a jitted, donated single-slot update: admission cost
+        # is one fused scatter, not a host-rebuilt, re-uploaded state tree.
+        if self._paged:
+            # Paged: only the length resets per slot — freed pages already
+            # had their position rows restored to PAD_POS on release, and
+            # the block-table row is host-side.
+            self._reset_slot = jax.jit(
+                lambda state, i: dict(state, len=state["len"].at[i].set(0)),
+                donate_argnums=0,
+            )
+            self._release_pages = jax.jit(
+                lambda state, pages: dict(
+                    state,
+                    pos=state["pos"].at[pages].set(PAD_POS, mode="drop"),
+                ),
+                donate_argnums=0,
+            )
+        else:
+            def _dense_reset(state, i):
+                def fix(path, leaf):
+                    name = str(getattr(path[-1], "key", ""))
+                    if name == "len":
+                        return leaf.at[i].set(0)
+                    if name == "pos":
+                        return leaf.at[i].set(PAD_POS)
+                    return leaf
+
+                return jax.tree_util.tree_map_with_path(fix, state)
+
+            self._reset_slot = jax.jit(_dense_reset, donate_argnums=0)
+
         self.slots: list[Request | None] = [None] * max_batch
         self.queue: list[Request] = []
         self.done: list[Request] = []
-        self._step = jax.jit(bundle.decode_step)
-        self._chunked = bundle.prefill_chunk is not None
-        self._chunk_step = (
-            jax.jit(bundle.prefill_chunk) if self._chunked else None
-        )
-        if not self._chunked and not bundle.decode_rollback_safe:
-            # Recurrent families (ssm / RG-LRU): decode_step advances every
-            # row's hidden state, and there is no cache-style rollback — the
-            # fallback prefill would silently corrupt concurrent requests.
-            raise NotImplementedError(
-                f"family {bundle.cfg.family!r} has no chunked prefill and its "
-                "recurrent serve state cannot be rolled back per slot; "
-                "batched serving needs masked decode steps for this family"
-            )
         self._uid = 0
         self._hold_decode: set[int] = set()  # first decode deferred (budget)
         self.counters = {
             "decode_steps": 0,
             "prefill_steps": 0,
             "prefill_tokens": 0,
+            "preemptions": 0,
+            "eos_stops": 0,
         }
 
     # ------------------------------------------------------------- API
 
     def submit(self, prompt, max_new_tokens=16, eos_id=None) -> Request:
-        """Queue a request.  The prompt must fit the slot cache; generation
-        that would run past ``max_len`` is truncated (the request retires at
-        cache capacity with fewer than ``max_new_tokens`` tokens — no cache
-        write ever lands out of range)."""
+        """Queue a request.  The prompt must fit one slot's cache capacity
+        (``max_len`` dense, ``slot_pages * page_size`` paged); generation
+        that would run past capacity is truncated (the request retires at
+        the last writable position — no cache write ever lands out of
+        range)."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.size < 1:
             raise ValueError("empty prompt")
-        if prompt.size >= self.max_len:
+        if prompt.size >= self.cap:
+            kind = (
+                f"paged capacity {self.cap} "
+                f"({self.slot_pages} pages x {self.page_size})"
+                if self._paged else f"max_len={self.max_len}"
+            )
             raise ValueError(
-                f"prompt of {prompt.size} tokens cannot fit max_len={self.max_len}"
+                f"prompt of {prompt.size} tokens cannot fit {kind}"
+            )
+        if self._paged and pages_for(prompt.size - 1, self.page_size) > self.max_pages:
+            raise ValueError(
+                f"prompt of {prompt.size} tokens needs "
+                f"{pages_for(prompt.size - 1, self.page_size)} pages; the "
+                f"pool holds {self.max_pages} — it can never be admitted"
             )
         self._uid += 1
         req = Request(
@@ -137,6 +246,8 @@ class ServingEngine:
             max_new_tokens=max_new_tokens,
             eos_id=eos_id,
         )
+        req._tokens = prompt  # grows to prompt+output on preemption resume
+        req._pages = []
         req.t_submit = time.perf_counter()
         self.queue.append(req)
         return req
@@ -156,33 +267,126 @@ class ServingEngine:
 
     def _admit(self):
         for i, slot in enumerate(self.slots):
-            if slot is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[i] = req
-                self._reset_slot_cache(i)
-                req._filled = 0  # prompt tokens already in the cache
-                if not self._chunked:
-                    self._prefill_slot_fallback(i, req)
-                elif len(req.prompt) == 1:
-                    req._next_token = int(req.prompt[-1])
+            if slot is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            if self._paged:
+                need = pages_for(len(req._tokens) - 1, self.page_size)
+                if need > self.alloc.free_pages:
+                    # Page exhaustion: strict FCFS — later requests wait
+                    # behind the head rather than starving it.
+                    break
+                req._pages = self.alloc.alloc(need)
+                self._bt[i, :] = self.NULL
+                self._bt[i, :need] = req._pages
+                self._bt_dirty = True
+            self.queue.pop(0)
+            self.slots[i] = req
+            self.state = self._reset_slot(self.state, i)
+            req._filled = 0  # prompt tokens already in the cache
+            req._cached = 0  # total cache slots written (prefill + decode)
+            if not self._chunked:
+                self._prefill_slot_fallback(i, req)
+            elif len(req._tokens) == 1:
+                req._next_token = int(req._tokens[-1])
 
     def _prefilling(self, req) -> bool:
-        return getattr(req, "_filled", 0) < len(req.prompt) - 1
+        return getattr(req, "_filled", 0) < len(req._tokens) - 1
 
-    def _reset_slot_cache(self, i):
-        """Zero one slot's cache row (len/pos) — other slots untouched."""
+    def _sync_bt(self):
+        if self._paged and self._bt_dirty:
+            self.state = dict(self.state, block_tables=jnp.asarray(self._bt))
+            self._bt_dirty = False
 
-        def fix(path, leaf):
-            name = str(getattr(path[-1], "key", ""))
-            if name == "len":
-                return leaf.at[i].set(0)
-            if name == "pos":
-                from repro.kernels.flash_attention import PAD_POS
+    # ---- paged bookkeeping ----------------------------------------------
 
-                return leaf.at[i].set(PAD_POS)
-            return leaf
+    def _free_slot_pages(self, i):
+        """Return slot ``i``'s pages to the pool; restore their position
+        rows to PAD_POS so a future owner never attends stale entries."""
+        pages = [int(p) for p in self._bt[i] if p != self.NULL]
+        if pages:
+            self.alloc.free(pages)
+            padded = np.full((self.slot_pages,), self.NULL, np.int32)
+            padded[: len(pages)] = pages
+            self.state = self._release_pages(self.state, jnp.asarray(padded))
+        self._bt[i, :] = self.NULL
+        self._bt_dirty = True
 
-        self.state = jax.tree_util.tree_map_with_path(fix, self.state)
+    def _evict(self, i):
+        """Preempt slot ``i``: free its pages and re-queue the request.
+
+        The request retains its prompt *and* everything it generated — on
+        re-admission it re-prefills ``prompt + output`` through the chunked
+        path and resumes decoding where it left off (recompute-style
+        preemption: pages are the only thing lost).
+        """
+        req = self.slots[i]
+        self.counters["preemptions"] += 1
+        self._free_slot_pages(i)
+        self.slots[i] = None
+        self._hold_decode.discard(i)
+        if req.output:
+            req._tokens = np.concatenate(
+                [req.prompt, np.asarray(req.output, np.int32)]
+            )
+        req._filled = 0
+        req._cached = 0
+        req._pages = []
+        # Re-queue by priority (uid order = FCFS): an evicted request goes
+        # back ahead of anything submitted after it.
+        uids = [r.uid for r in self.queue]
+        self.queue.insert(bisect.bisect_left(uids, req.uid), req)
+
+    def _pick_victim(self, requester_i):
+        """Lowest-priority (newest) occupant, or None if the requester is
+        alone — a single request larger than the whole pool cannot be saved
+        by preempting itself."""
+        occ = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        i, r = max(occ, key=lambda t: t[1].uid)
+        if i == requester_i and len(occ) == 1:
+            return None
+        return i
+
+    def _grow_pages(self, hold):
+        """Page-granular decode growth: map a fresh page for every slot
+        whose next write crosses a page boundary, preempting (newest first)
+        when the pool is dry."""
+        cands = sorted(
+            (
+                (i, r) for i, r in enumerate(self.slots)
+                if r is not None and not self._prefilling(r) and i not in hold
+            ),
+            key=lambda t: t[1].uid,
+        )
+        for i, req in cands:
+            if self.slots[i] is not req:
+                continue  # already evicted as someone's victim
+            tbl = req._cached // self.page_size
+            if self._bt[i, tbl] != self.NULL:
+                continue
+            while True:
+                try:
+                    page = self.alloc.alloc(1)[0]
+                except MemoryError:
+                    if not self.preempt:
+                        raise RuntimeError(
+                            f"KV page pool exhausted ({self.max_pages} pages)"
+                            " and preemption is disabled"
+                        ) from None
+                    victim = self._pick_victim(i)
+                    if victim is None:
+                        raise RuntimeError(
+                            "KV page pool exhausted: the remaining request "
+                            "alone needs more pages than the pool holds"
+                        ) from None
+                    self._evict(victim)
+                    if victim == i:
+                        break  # evicted ourselves; skip decode this round
+                    continue
+                self._bt[i, tbl] = page
+                req._pages.append(page)
+                self._bt_dirty = True
+                break
 
     # ---- chunked prefill ------------------------------------------------
 
@@ -213,15 +417,16 @@ class ServingEngine:
         tokens = np.zeros((self.max_batch, C), np.int32)
         n_valid = np.zeros((self.max_batch,), np.int32)
         for i, req in prefilling:
-            remaining = len(req.prompt) - 1 - req._filled
+            remaining = len(req._tokens) - 1 - req._filled
             a = min(remaining, C, budget)
             if a <= 0:
                 continue
-            tokens[i, :a] = req.prompt[req._filled:req._filled + a]
+            tokens[i, :a] = req._tokens[req._filled:req._filled + a]
             n_valid[i] = a
             budget -= a
         if not n_valid.any():
             return
+        self._sync_bt()
         _, self.state = self._chunk_step(
             self.params, jnp.asarray(tokens), self.state, jnp.asarray(n_valid)
         )
@@ -229,9 +434,10 @@ class ServingEngine:
         self.counters["prefill_tokens"] += int(n_valid.sum())
         for i, req in prefilling:
             req._filled += int(n_valid[i])
+            req._cached += int(n_valid[i])
             if not self._prefilling(req):
                 # Last prompt token is fed by the slot's first decode step.
-                req._next_token = int(req.prompt[-1])
+                req._next_token = int(req._tokens[-1])
                 if self.token_budget is not None:
                     # Metered: this iteration's tokens were already spent on
                     # the slot's prefill allocation; its first decode waits
@@ -252,7 +458,7 @@ class ServingEngine:
             (j, s) for j, s in enumerate(self.slots) if s is not None and j != i
         ]
         lens_before = np.asarray(self.state["len"])
-        for tok in req.prompt[:-1]:
+        for tok in req._tokens[:-1]:
             toks = np.zeros((self.max_batch,), np.int32)
             toks[i] = tok
             _, self.state = self._step(self.params, jnp.asarray(toks), self.state)
@@ -261,8 +467,9 @@ class ServingEngine:
                 for j, _ in others:
                     new_len[j] = lens_before[j]
                 self.state = dict(self.state, len=jnp.asarray(new_len))
-        req._filled = len(req.prompt) - 1  # prefill complete -> decode phase
-        req._next_token = int(req.prompt[-1])
+        req._filled = len(req._tokens) - 1  # prefill complete -> decode phase
+        req._cached = req._filled
+        req._next_token = int(req._tokens[-1])
 
     # ---- decode ---------------------------------------------------------
 
@@ -274,6 +481,8 @@ class ServingEngine:
 
     def _decode_once(self):
         hold, self._hold_decode = self._hold_decode, set()
+        if self._paged:
+            self._grow_pages(hold)
         toks = np.zeros((self.max_batch,), np.int32)
         active = []
         for i, req in enumerate(self.slots):
@@ -283,6 +492,7 @@ class ServingEngine:
             active.append(i)
         if not active:
             return
+        self._sync_bt()
         if self._chunked:
             mask = np.zeros((self.max_batch,), bool)
             mask[active] = True
@@ -296,21 +506,33 @@ class ServingEngine:
         self.counters["decode_steps"] += 1
         nxt = np.asarray(self._sample(logits))
         now = time.perf_counter()
-        lens = np.asarray(self.state["len"]).copy()
         for i in active:
             req = self.slots[i]
+            req._cached += 1  # the fed token was written at cache slot len-1
             tok = int(nxt[i])
             if req.t_first is None:
                 req.t_first = now
-            req.output.append(tok)
-            req._next_token = tok
-            finished = len(req.output) >= req.max_new_tokens or (
-                req.eos_id is not None and tok == req.eos_id
-            )
-            if finished or lens[i] >= self.max_len - 1:
+            stopped_eos = req.eos_id is not None and tok == req.eos_id
+            if stopped_eos:
+                # EOS is a stop *signal*, not an emitted token: it is never
+                # appended to the output, never fed back, and never counted
+                # toward max_new_tokens or token throughput.
+                req.stopped_eos = True
+                self.counters["eos_stops"] += 1
+            else:
+                req.output.append(tok)
+                req._next_token = tok
+            finished = stopped_eos or len(req.output) >= req.max_new_tokens
+            if finished or req._cached >= self.cap:
+                # Either done, or at capacity: the cache is full through its
+                # last writable position and the next decode step would have
+                # nowhere to write its token.
                 req.t_done = now
                 self.done.append(req)
                 self.slots[i] = None
+                if self._paged:
+                    self._free_slot_pages(i)
+                    self.alloc.defrag_order()
 
     # ------------------------------------------------------------ stats
 
@@ -318,10 +540,13 @@ class ServingEngine:
         lat = [r.t_done - r.t_submit for r in self.done if r.t_done]
         ttft = [r.t_first - r.t_submit for r in self.done if r.t_first]
         toks = sum(len(r.output) for r in self.done)
-        return {
+        out = {
             "requests": len(self.done),
             "tokens": toks,
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
             "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
             **self.counters,
         }
+        if self._paged:
+            out["pages"] = self.alloc.utilization()
+        return out

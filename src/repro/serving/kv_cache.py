@@ -1,0 +1,276 @@
+"""Paged sequence-parallel KV cache: the serving memory subsystem.
+
+The dense serving cache (`models/transformer.py::init_decode_cache`) reserves
+a contiguous ``max_len`` region per slot, so one long request dictates memory
+for every short one and no prompt longer than a slot can ever be served.
+Production million-token inference pages the cache instead (Context
+Parallelism for Scalable Million-Token Inference, arXiv:2411.01783; vLLM's
+PagedAttention): KV lives in fixed-size **pages** drawn from one shared pool,
+and each request holds a **block table** mapping its logical token positions
+to pages.  Ring Attention's observation (arXiv:2310.01889) that decode math
+only ever needs per-device *partials* carries over unchanged — a paged read
+gathers the mapped pages into a position-masked view and reuses the existing
+``(out, lse)`` merge (``core/decode.py``), so paged attention is numerically
+the dense attention.
+
+Three layers live here:
+
+  * :class:`PageAllocator` — host-side bookkeeping: a free list over
+    ``n_pages`` physical pages with alloc/free/high-water/utilization.
+    Allocation decisions are inherently dynamic (admission, growth,
+    preemption), so they stay in Python; nothing here touches device memory.
+  * device-state construction (:func:`init_paged_cache`) — the page pool
+    pytree: per-layer K/V of shape ``(L, n_pages, page_size, Hkv, Dh)``, a
+    position pool ``(n_pages, page_size)`` and per-slot block tables
+    ``(B, slot_pages)``.  Under a mesh the *page* dimension shards over the
+    SP axes, so a prompt whose pages exceed one device's page budget simply
+    stripes across the ring — the gather re-establishes the sequence-sharded
+    view ``sp_decode`` / ``sp_prefill`` already consume.
+  * pure-JAX index helpers (:func:`view_indices`, :func:`write_coords`,
+    :func:`gather_pages`) shared by the paged model steps
+    (``models/transformer.py``) — one place owns the page-table arithmetic.
+
+Sentinel convention: an unmapped block-table entry holds ``n_pages`` (one
+past the last page).  Gathers use ``mode="fill"`` (K/V fill 0, positions fill
+``PAD_POS`` so the kernel masks them); scatters use ``mode="drop"`` so writes
+through unmapped entries vanish.  This keeps every shape static — one
+compiled step for the engine's whole life, exactly like the dense path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import PAD_POS
+
+__all__ = [
+    "PageAllocator",
+    "init_paged_cache",
+    "view_indices",
+    "write_coords",
+    "gather_pages",
+    "gather_positions",
+    "pages_for",
+    "paged_cache_bytes",
+    "dense_cache_bytes",
+]
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` cache slots (at least one: a slot
+    admitted for decode writes immediately)."""
+    return max(1, -(-int(n_tokens) // page_size))
+
+
+class PageAllocator:
+    """Free-list allocator over ``n_pages`` physical pages (host-side).
+
+    Pages are plain ints ``[0, n_pages)``; ``n_pages`` itself is the unmapped
+    sentinel used by the device block tables.  Tracks a high-water mark so
+    benchmarks can report the true memory footprint paging achieves versus
+    the dense worst-case slab.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 1:
+            raise ValueError(f"need at least one page, got {n_pages}")
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, -1, -1))  # pop() -> low ids first
+        self._free_set = set(self._free)  # O(1) double-free detection
+        self.high_water = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        """Allocate ``n`` pages or raise ``MemoryError`` (caller preempts or
+        defers admission; nothing is allocated on failure)."""
+        if n > len(self._free):
+            raise MemoryError(
+                f"{n} pages requested, {len(self._free)} free of {self.n_pages}"
+            )
+        got = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(got)
+        self.high_water = max(self.high_water, self.pages_in_use)
+        return got
+
+    def free(self, pages) -> None:
+        for p in pages:
+            p = int(p)
+            if not 0 <= p < self.n_pages:
+                raise ValueError(f"page {p} out of range [0, {self.n_pages})")
+            if p in self._free_set:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)
+            self._free_set.add(p)
+
+    def defrag_order(self) -> None:
+        """Re-sort the free list so future allocations prefer low page ids.
+
+        Physical pages are interchangeable (the block table is the only
+        ordering), so "defragmentation" here is purely about keeping the
+        in-use region compact for cheaper pool resizing / nicer utilization
+        telemetry — no device data ever moves.
+        """
+        self._free.sort(reverse=True)
+
+    def utilization(self) -> dict:
+        return {
+            "pages_total": self.n_pages,
+            "pages_in_use": self.pages_in_use,
+            "pages_free": self.free_pages,
+            "high_water": self.high_water,
+            "frac_in_use": self.pages_in_use / self.n_pages,
+        }
+
+
+# ---------------------------------------------------------------------------
+# device state
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache(
+    n_layers: int,
+    n_kv_heads: int,
+    head_dim: int,
+    *,
+    n_pages: int,
+    page_size: int,
+    max_batch: int,
+    slot_pages: int,
+    dtype=jnp.bfloat16,
+    pctx=None,
+):
+    """Page-pool serve state: the paged replacement for the dense slab.
+
+    ``k/v (L, n_pages, page_size, Hkv, Dh)``; ``pos (n_pages, page_size)``
+    global positions with the ``PAD_POS`` sentinel for unwritten/unowned
+    slots; ``block_tables (max_batch, slot_pages)`` int32 page ids with the
+    ``n_pages`` sentinel for unmapped entries; ``len (max_batch,)`` filled
+    lengths.  Physical memory is ``n_pages * page_size`` tokens total —
+    typically far below the dense ``max_batch * max_len`` — while each slot's
+    *logical* capacity is ``slot_pages * page_size``.
+
+    Under an active ``pctx`` mesh the *page* dimension shards over the SP
+    axes (pages stripe across the ring, ``n_pages`` must divide the SP
+    degree), ``pos`` alongside it; block tables and lengths replicate.  Each
+    device then holds ``n_pages / P`` pages and the per-step gathers
+    re-establish the sequence-sharded view the serving plans consume.
+    """
+    dtype = jnp.dtype(dtype)
+    state = {
+        "k": jnp.zeros((n_layers, n_pages, page_size, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((n_layers, n_pages, page_size, n_kv_heads, head_dim), dtype),
+        "pos": jnp.full((n_pages, page_size), PAD_POS, jnp.int32),
+        "block_tables": jnp.full((max_batch, slot_pages), n_pages, jnp.int32),
+        "len": jnp.zeros((max_batch,), jnp.int32),
+    }
+    if pctx is not None and getattr(pctx, "active", False):
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        if n_pages % pctx.sp_degree:
+            raise ValueError(
+                f"paged pool: n_pages={n_pages} must be a multiple of the SP "
+                f"degree {pctx.sp_degree} so pages stripe evenly across the "
+                "ring"
+            )
+        seq = pctx.seq_spec()
+        specs = {
+            "k": P(None, seq, None, None, None),
+            "v": P(None, seq, None, None, None),
+            "pos": P(seq, None),
+            "block_tables": P(),
+            "len": P(),
+        }
+        state = {
+            name: jax.device_put(x, NamedSharding(pctx.mesh, specs[name]))
+            for name, x in state.items()
+        }
+    return state
+
+
+# ---------------------------------------------------------------------------
+# page-table index arithmetic (pure JAX, shared by the paged model steps)
+# ---------------------------------------------------------------------------
+
+
+def view_indices(block_tables, page_size: int):
+    """Flat token indices of each slot's gathered view.
+
+    ``block_tables (B, W)`` -> ``(B, W * page_size)`` indices into the
+    flattened ``n_pages * page_size`` token pool.  Unmapped entries (the
+    ``n_pages`` sentinel) map past the pool end, where gathers fill.
+    """
+    offs = jnp.arange(page_size, dtype=block_tables.dtype)
+    flat = block_tables[:, :, None] * page_size + offs
+    return flat.reshape(block_tables.shape[0], -1)
+
+
+def write_coords(block_tables, logical_slots, valid, n_pages: int, page_size: int):
+    """Physical ``(page, offset)`` for logical cache ``logical_slots``.
+
+    ``logical_slots`` is ``(B,)`` (decode) or ``(B, C)`` (a prefill chunk);
+    ``valid`` the same shape (False rows/tokens get the ``n_pages`` drop
+    sentinel).  Unmapped table entries also resolve to the sentinel, so a
+    write can never land on a page the slot does not own.
+    """
+    W = block_tables.shape[1]
+    tbl_raw = logical_slots // page_size
+    tbl = jnp.clip(tbl_raw, 0, W - 1)
+    if logical_slots.ndim == 1:
+        page = block_tables[jnp.arange(block_tables.shape[0]), tbl]
+    else:
+        page = block_tables[jnp.arange(block_tables.shape[0])[:, None], tbl]
+    # A slot past the table end (engine retires before this can happen) must
+    # drop, not silently alias the clipped last page.
+    ok = jnp.logical_and(valid, jnp.logical_and(tbl_raw < W, page < n_pages))
+    page = jnp.where(ok, page, n_pages)
+    return page, logical_slots % page_size
+
+
+def gather_pages(pool, flat_view):
+    """Gather ``pool (n_pages, page_size, ...)`` into per-slot views.
+
+    ``flat_view (B, V)`` from :func:`view_indices` -> ``(B, V, ...)``.
+    Out-of-pool indices (unmapped pages) fill with zeros — harmless because
+    their positions fill with ``PAD_POS`` and the kernel masks on position.
+    """
+    flat_pool = pool.reshape((-1,) + pool.shape[2:])
+    return jnp.take(flat_pool, flat_view, axis=0, mode="fill", fill_value=0)
+
+
+def gather_positions(pos_pool, flat_view):
+    """Gather the position pool into per-slot views; unmapped -> PAD_POS."""
+    return jnp.take(
+        pos_pool.reshape(-1), flat_view, axis=0, mode="fill", fill_value=PAD_POS
+    )
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (benchmarks / docs worked example)
+# ---------------------------------------------------------------------------
+
+
+def dense_cache_bytes(cfg, max_batch: int, max_len: int) -> int:
+    """Bytes the dense slab pins for its whole life: worst case, always."""
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    return (
+        2 * cfg.n_layers * max_batch * max_len * cfg.n_kv_heads * cfg.head_dim
+        * itemsize
+    )
+
+
+def paged_cache_bytes(cfg, n_pages: int, page_size: int) -> int:
+    """Bytes ``n_pages`` pool pages hold (evaluate at the allocator's
+    ``high_water`` for the achieved footprint, at the pool size for the cap)."""
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    return (
+        2 * cfg.n_layers * n_pages * page_size * cfg.n_kv_heads * cfg.head_dim
+        * itemsize
+    )

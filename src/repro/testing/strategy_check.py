@@ -249,6 +249,76 @@ def check_prefill_chunk():
     print("PASS prefill chunk (resident sharded cache + Update() merge)")
 
 
+def check_paged():
+    """Paged serving steps on a real mesh: the page pool's page dimension
+    shards over the SP axis (pages stripe across the ring, so a block table
+    wider than one device's page budget spans devices), the gathered view
+    re-enters the same sp_prefill/sp_decode partial-merge path, and the
+    result equals the single-device dense chain."""
+    from repro.configs import ARCHS
+    from repro.models import build_model
+    from repro.serving.kv_cache import PageAllocator, pages_for
+
+    cfg = ARCHS["qwen3-1.7b"].reduced(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16, d_ff=128,
+        vocab_size=97, dtype="float32", param_dtype="float32",
+    )
+    prompt = list(np.random.default_rng(29).integers(1, 90, 24))
+    n_decode = 3
+    ps, W, n_pages = 4, 16, 32  # 32 pages / 8 devices = 4-page budget each;
+    # this prompt + decode span 7 pages -> necessarily crosses devices
+
+    # single-device dense oracle
+    d_pctx = ParallelContext(mesh=None, impl="xla")
+    d_bundle = build_model(cfg, d_pctx)
+    params = d_bundle.init(jax.random.PRNGKey(0))
+    cache = d_bundle.init_serve_state(1, 64)
+    toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :])
+    pos = jnp.arange(len(prompt), dtype=jnp.int32)[None, :]
+    ref_logits, _ = jax.jit(d_bundle.prefill)(params, toks, pos, cache)
+    ref_logits.block_until_ready()
+    ref = [np.asarray(ref_logits[0])]
+    dstep = jax.jit(lambda p, t, s: d_bundle.decode_step(p, t, s))
+    dcache = jax.jit(d_bundle.prefill)(params, toks, pos, cache)[1]
+    tok = int(np.argmax(ref[0]))
+    for _ in range(n_decode):
+        l, dcache = dstep(params, jnp.asarray([tok], jnp.int32), dcache)
+        l.block_until_ready()
+        ref.append(np.asarray(l[0]))
+        tok = int(np.argmax(ref[-1]))
+
+    # paged chain on the (data=2, model=4) mesh
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    pctx = ParallelContext(mesh=mesh, sp_axes=("model",), impl="xla", block_k=8)
+    bundle = build_model(cfg, pctx)
+    state = bundle.init_paged_state(n_pages, ps, 2, W)
+    alloc = PageAllocator(n_pages)
+    bt = np.full((2, W), n_pages, np.int32)
+    pages = alloc.alloc(pages_for(len(prompt) + n_decode, ps))[::-1]
+    bt[0, : len(pages)] = pages
+    state = dict(state, block_tables=jnp.asarray(bt))
+    cstep = jax.jit(bundle.prefill_chunk_paged)
+    filled, chunk, logits = 0, 8, None
+    while filled < len(prompt):
+        a = min(chunk, len(prompt) - filled)
+        t = np.zeros((2, chunk), np.int32)
+        t[0, :a] = prompt[filled:filled + a]
+        nv = np.zeros((2,), np.int32)
+        nv[0] = a
+        logits, state = cstep(params, jnp.asarray(t), state, jnp.asarray(nv))
+        logits.block_until_ready()
+        filled += a
+    np.testing.assert_allclose(np.asarray(logits[0]), ref[0], **TOL)
+    pstep = jax.jit(lambda p, t, s: bundle.decode_step_paged(p, t, s))
+    tok = int(np.argmax(ref[0]))
+    for i in range(n_decode):
+        l, state = pstep(params, jnp.asarray([tok, 0], jnp.int32), state)
+        l.block_until_ready()
+        np.testing.assert_allclose(np.asarray(l[0]), ref[i + 1], **TOL)
+        tok = int(np.argmax(ref[i + 1]))
+    print("PASS paged (SP-sharded page pool == single-device dense chain)")
+
+
 def check_scan():
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     pctx = ParallelContext(mesh=mesh, sp_axes=("model",), layout="contig")
@@ -508,6 +578,7 @@ CHECKS = {
     "hybrid": check_hybrid,
     "decode": check_decode,
     "prefill": check_prefill_chunk,
+    "paged": check_paged,
     "scan": check_scan,
     "scan_hybrid": check_scan_hybrid,
     "moe": check_moe,

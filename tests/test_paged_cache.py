@@ -1,0 +1,325 @@
+"""Paged sequence-parallel KV cache: allocator, paged-vs-dense equivalence,
+and the engine's page-pool boundaries (admission, growth, preemption,
+capacity retirement).
+
+The numerical contract: a paged read gathers the block-table view and runs
+the *same* SP attention as the dense slab, so paged logits equal dense
+logits bit-for-bit up to fp noise — across page sizes and with deliberately
+non-contiguous page assignments.  The scheduling contract: admission waits
+for pages (strict FCFS), decode grows page-granularly, a dry pool preempts
+the newest request (which resumes *exactly*, re-prefilled from its retained
+prompt + generated tokens), and retirement happens at the last writable
+position — never past it.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.api import ParallelContext
+from repro.models import build_model
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import PageAllocator, pages_for
+
+from test_serving import GREEDY_TOL, _legacy_step, assert_greedy_chain_matches
+
+PCTX = ParallelContext(mesh=None, impl="xla")
+
+
+def _setup():
+    cfg = ARCHS["qwen3-1.7b"].reduced(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_head=32, d_ff=128,
+        vocab_size=97,
+    )
+    bundle = build_model(cfg, PCTX)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+
+def test_page_allocator_alloc_free_high_water():
+    a = PageAllocator(4)
+    assert a.free_pages == 4 and a.pages_in_use == 0
+    p1 = a.alloc(3)
+    assert len(set(p1)) == 3 and a.free_pages == 1 and a.high_water == 3
+    with pytest.raises(MemoryError):
+        a.alloc(2)
+    assert a.free_pages == 1, "failed alloc must not leak pages"
+    a.free(p1[:2])
+    p2 = a.alloc(2)
+    assert set(p2).isdisjoint({p1[2]})
+    assert a.high_water == 3  # high-water survives frees
+    u = a.utilization()
+    assert u["pages_in_use"] == 3 and u["pages_total"] == 4
+    with pytest.raises(ValueError, match="double free"):
+        a.free([p2[0], p2[0]])
+    with pytest.raises(ValueError, match="out of range"):
+        a.free([99])
+
+
+def test_page_allocator_defrag_prefers_low_ids():
+    a = PageAllocator(6)
+    pages = a.alloc(6)
+    a.free(pages)
+    a.defrag_order()
+    assert a.alloc(2) == [0, 1]
+
+
+def test_pages_for():
+    assert pages_for(0, 4) == 1  # admitted slots always own a page
+    assert pages_for(1, 4) == 1
+    assert pages_for(4, 4) == 1
+    assert pages_for(5, 4) == 2
+
+
+# ---------------------------------------------------------------------------
+# paged == dense numerics (model level, non-contiguous block tables)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_matches_dense_across_page_sizes():
+    """Page-size sweep: paged chunked prefill + paged decode logits equal the
+    dense one-shot prefill + dense decode — with the slot's pages assigned in
+    *reversed* order so the block-table indirection is actually exercised."""
+    cfg, bundle, params = _setup()
+    prompt = [5, 17, 3, 42, 9, 11, 63, 2, 8, 44, 71, 30]
+    n_decode = 3
+
+    cache0 = bundle.init_serve_state(1, 32)
+    toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :])
+    pos = jnp.arange(len(prompt), dtype=jnp.int32)[None, :]
+    ref_logits, ref_cache = jax.jit(bundle.prefill)(params, toks, pos, cache0)
+    ref_logits.block_until_ready()
+    ref_logits = np.asarray(ref_logits[0])
+
+    for ps in (1, 2, 4, 8):
+        W = -(-24 // ps)
+        n_pages = 2 * W
+        alloc = PageAllocator(n_pages)
+        bt = np.full((2, W), n_pages, np.int32)
+        pages = alloc.alloc(pages_for(len(prompt) + n_decode, ps))[::-1]
+        bt[0, : len(pages)] = pages
+        state = bundle.init_paged_state(n_pages, ps, 2, W)
+        state = dict(state, block_tables=jnp.asarray(bt))
+        step = jax.jit(bundle.prefill_chunk_paged)
+        filled, chunk, logits = 0, 5, None
+        while filled < len(prompt):
+            a = min(chunk, len(prompt) - filled)
+            t = np.zeros((2, chunk), np.int32)
+            t[0, :a] = prompt[filled:filled + a]
+            nv = np.zeros((2,), np.int32)
+            nv[0] = a
+            logits, state = step(params, jnp.asarray(t), state, jnp.asarray(nv))
+            logits.block_until_ready()
+            filled += a
+        np.testing.assert_allclose(
+            np.asarray(logits[0]), ref_logits, atol=1e-5, rtol=1e-5,
+            err_msg=f"ps={ps} prefill",
+        )
+
+        dstate = ref_cache
+        dstep = jax.jit(lambda p, t, s: bundle.decode_step(p, t, s))
+        pstep = jax.jit(lambda p, t, s: bundle.decode_step_paged(p, t, s))
+        tok = int(np.argmax(ref_logits))
+        for i in range(n_decode):
+            ld, dstate = dstep(params, jnp.asarray([tok], jnp.int32), dstate)
+            ld.block_until_ready()
+            lp, state = pstep(params, jnp.asarray([tok, 0], jnp.int32), state)
+            lp.block_until_ready()
+            np.testing.assert_allclose(
+                np.asarray(lp[0]), np.asarray(ld[0]), atol=1e-5, rtol=1e-5,
+                err_msg=f"ps={ps} decode step {i}",
+            )
+            tok = int(np.argmax(np.asarray(ld[0])))
+
+
+def test_paged_unmapped_pages_are_invisible():
+    """Writes through unmapped block-table entries drop; gathers of unmapped
+    entries mask out — a row with no pages behaves as an empty cache."""
+    cfg, bundle, params = _setup()
+    ps, W, n_pages = 4, 4, 8
+    state = bundle.init_paged_state(n_pages, ps, 2, W)  # all tables unmapped
+    before = jax.tree.map(np.asarray, state)
+    step = jax.jit(bundle.prefill_chunk_paged)
+    t = np.zeros((2, 4), np.int32)
+    t[0] = [5, 17, 3, 42]
+    _, state = step(params, jnp.asarray(t), state, jnp.asarray([4, 0], np.int32))
+    after = jax.tree.map(np.asarray, state)
+    for k in ("k", "v", "pos"):
+        np.testing.assert_array_equal(after[k], before[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# engine boundaries
+# ---------------------------------------------------------------------------
+
+
+def test_engine_paged_long_prompt_beyond_dense_slab():
+    """The acceptance path: a prompt longer than the dense slab is rejected
+    by the dense engine and served through the paged SP path — with every
+    emitted token matching the one-shot dense forward (teacher-forced) and
+    physical memory below the dense worst case."""
+    cfg, bundle, params = _setup()
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab_size, 40)
+
+    dense = ServingEngine(bundle, params, max_batch=2, max_len=32)
+    with pytest.raises(ValueError, match="cannot fit"):
+        dense.submit(prompt)
+
+    # logical capacity 64 tokens/slot, physical pool 64 tokens total —
+    # half the 2 * 64 dense slab this logical capacity would have pinned
+    eng = ServingEngine(
+        bundle, params, max_batch=2, max_len=64, prefill_chunk=8,
+        page_size=8, max_pages=8,
+    )
+    req = eng.submit(prompt, max_new_tokens=6)
+    eng.run()
+    assert len(req.output) == 6
+    assert eng.stats()["pages"]["high_water"] <= 8
+
+    # teacher-forced against the one-shot dense prefill (lm_apply = the
+    # fused full-sequence forward, no serving cache at all)
+    from repro.models import transformer as T
+
+    toks = list(prompt) + list(req.output)
+    x, _ = T.lm_apply(
+        params, jnp.asarray([toks], jnp.int32),
+        jnp.arange(len(toks), dtype=jnp.int32)[None, :], cfg=cfg, pctx=PCTX,
+    )
+    w = params["embed"]["table"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = np.asarray(
+        jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32), w.astype(jnp.float32))[0]
+    )
+    for t, tok in enumerate(req.output):
+        row = logits[len(prompt) - 1 + t]
+        assert row[tok] >= row.max() - GREEDY_TOL, (
+            f"step {t}: {tok} vs argmax {int(np.argmax(row))}"
+        )
+
+
+def test_engine_paged_preemption_requeue_round_trip():
+    """Forced preemption: the newest request is evicted when decode growth
+    drains the pool, re-queues, re-prefills from prompt + generated tokens,
+    and finishes with an oracle-exact chain; pages fully return to the pool."""
+    cfg, bundle, params = _setup()
+    rng = np.random.default_rng(0)
+    # 8-page x 4-token pool; each request grows to ceil(20/4) = 5 pages
+    eng = ServingEngine(
+        bundle, params, max_batch=2, max_len=64, prefill_chunk=4,
+        page_size=4, max_pages=8,
+    )
+    r1 = eng.submit(rng.integers(1, 90, 9), max_new_tokens=12)
+    r2 = eng.submit(rng.integers(1, 90, 9), max_new_tokens=12)
+    done = eng.run()
+    s = eng.stats()
+    assert len(done) == 2
+    assert s["preemptions"] >= 1, "pool was sized to force a preemption"
+    assert len(r1.output) == 12 and len(r2.output) == 12
+    assert s["pages"]["pages_in_use"] == 0, "retired pages must return"
+    step = _legacy_step(bundle)
+    assert_greedy_chain_matches(bundle, params, r1, 2, 64, step)
+    assert_greedy_chain_matches(bundle, params, r2, 2, 64, step)
+
+
+def test_engine_paged_admission_waits_for_pages():
+    """Page-exhaustion admission refusal: a request whose prompt pages are
+    not free stays queued (strict FCFS) until a retirement frees them."""
+    cfg, bundle, params = _setup()
+    rng = np.random.default_rng(1)
+    eng = ServingEngine(
+        bundle, params, max_batch=2, max_len=20, prefill_chunk=8,
+        page_size=4, max_pages=4,
+    )
+    ra = eng.submit(rng.integers(1, 90, 13), max_new_tokens=3)  # 3 pages
+    rb = eng.submit(rng.integers(1, 90, 13), max_new_tokens=3)  # must wait
+    eng._admit()
+    assert eng.slots[0] is ra
+    assert eng.slots[1] is None and eng.queue == [rb], (
+        "1 free page < 3 needed: B must stay queued, not grab the free slot"
+    )
+    done = eng.run()
+    assert len(done) == 2 and ra.t_done <= rb.t_first
+    assert len(ra.output) == 3 and len(rb.output) == 3
+    step = _legacy_step(bundle)
+    assert_greedy_chain_matches(bundle, params, ra, 2, 64, step)
+    assert_greedy_chain_matches(bundle, params, rb, 2, 64, step)
+
+
+def test_engine_capacity_retirement_at_last_writable_position():
+    """A request that hits capacity retires having written the *last*
+    writable cache slot — max_len - p + 1 emitted tokens, all oracle-exact
+    (so the token written at the final slot really entered the attention)."""
+    cfg, bundle, params = _setup()
+    prompt = [5, 17, 3, 42]
+    step = _legacy_step(bundle)
+    for kw in ({}, {"page_size": 4}):
+        eng = ServingEngine(
+            bundle, params, max_batch=2, max_len=16, prefill_chunk=4, **kw
+        )
+        req = eng.submit(prompt, max_new_tokens=100)
+        eng.run()
+        assert len(req.output) == 16 - len(prompt) + 1, kw
+        assert_greedy_chain_matches(bundle, params, req, 2, 64, step)
+        if not kw:
+            # dense: the retired row's final slot really was written (the
+            # pre-PR4 engine stopped one position short)
+            assert int(np.asarray(eng.state["pos"])[0, 15]) == 15
+            assert int(np.asarray(eng.state["len"])[0]) == 16
+
+
+def test_engine_paged_single_request_larger_than_pool():
+    cfg, bundle, params = _setup()
+    eng = ServingEngine(
+        bundle, params, max_batch=2, max_len=40, page_size=4, max_pages=4,
+    )
+    with pytest.raises(ValueError, match="never be admitted"):
+        eng.submit(list(range(1, 31)))  # needs 8 pages, pool holds 4
+    # fits at submit, but grows past the pool while running alone
+    req = eng.submit(list(range(1, 10)), max_new_tokens=30)
+    with pytest.raises(RuntimeError, match="alone needs more pages"):
+        eng.run()
+    assert req.t_done is None
+
+
+def test_engine_paged_preempt_disabled_raises():
+    cfg, bundle, params = _setup()
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(
+        bundle, params, max_batch=2, max_len=64, prefill_chunk=4,
+        page_size=4, max_pages=8, preempt=False,
+    )
+    eng.submit(rng.integers(1, 90, 9), max_new_tokens=12)
+    eng.submit(rng.integers(1, 90, 9), max_new_tokens=12)
+    with pytest.raises(RuntimeError, match="preemption is disabled"):
+        eng.run()
+
+
+def test_engine_paged_refuses_families_without_paged_steps():
+    cfg = ARCHS["whisper-base"].reduced(vocab_size=97)
+    bundle = build_model(cfg, PCTX)
+    params = bundle.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="paged"):
+        ServingEngine(bundle, params, max_batch=2, max_len=32, page_size=4)
+
+
+def test_engine_paged_rejects_bad_knobs():
+    cfg, bundle, params = _setup()
+    with pytest.raises(ValueError, match="page_size"):
+        ServingEngine(bundle, params, max_batch=1, max_len=32, page_size=0)
+    with pytest.raises(ValueError, match="max_pages"):
+        ServingEngine(
+            bundle, params, max_batch=1, max_len=32, page_size=4, max_pages=0
+        )
+    eng = ServingEngine(
+        bundle, params, max_batch=1, max_len=30, page_size=4, max_pages=16
+    )
+    assert eng.cap == 32  # max_len rounds up to whole pages
+    with pytest.raises(ValueError, match="paged capacity"):
+        eng.submit(list(range(1, 33)))

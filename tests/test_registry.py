@@ -331,6 +331,67 @@ def test_plan_hybrid_inner_validation():
         ).plan(shapes)
 
 
+def test_hybrid_rejects_unknown_inner_kwargs():
+    """A misspelled extra (``travle_dtype``) must raise, naming the accepted
+    extras — the pre-PR4 ``hybrid_sp`` silently filtered unknown kwargs, so
+    the schedule ran at its default and the typo was never surfaced."""
+    import jax.numpy as jnp
+
+    from repro.core.hybrid import hybrid_sp
+
+    x = jnp.zeros((1, 4, 2, 8))
+    p = jnp.zeros((1, 4), jnp.int32)
+    with pytest.raises(ValueError, match="travle_dtype"):
+        hybrid_sp(
+            x, x, x, p, p, pod_axis="pod", axis_name="model",
+            inner="tokenring", travle_dtype="bfloat16",
+        )
+    # the error names the extras the inner strategy does accept
+    with pytest.raises(ValueError, match="travel_dtype"):
+        hybrid_sp(
+            x, x, x, p, p, pod_axis="pod", axis_name="model",
+            inner="tokenring", travle_dtype="bfloat16",
+        )
+
+
+def test_paged_block_table_cost_term():
+    """``table_pages`` prices the paged cache's per-step block-table
+    broadcast on top of the (page-location-independent) psum payload, for
+    both serving schedules, and ``plan_decode``/``plan_prefill`` thread it."""
+    import jax
+
+    from repro.core.api import AttnShapes, ParallelContext
+
+    B, S, Hq, Hkv, D, P, W = 2, 1, 8, 2, 64, 4, 128
+    extra = (P - 1) / P * B * W * 4  # int32 table rows through the same ring
+    for name, S_ in (("decode", 1), ("prefill", 32)):
+        base = strategy_cost(get_strategy(name), B, S_, Hq, Hkv, D, P)
+        paged = strategy_cost(
+            get_strategy(name), B, S_, Hq, Hkv, D, P, table_pages=W
+        )
+        assert paged.fwd_bytes == base.fwd_bytes + extra, name
+        # the page *data* never moves: the term is cache-length independent
+        long = strategy_cost(
+            get_strategy(name), B, S_, Hq, Hkv, D, P, table_pages=W,
+            S_kv=512 * 1024,
+        )
+        assert long.fwd_bytes == paged.fwd_bytes, name
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pctx = ParallelContext(mesh=mesh, sp_axes=("model",))
+    shapes = AttnShapes(B=2, Sq=1, Hq=8, Hkv=2, D=64, Sk=4096, dtype_bytes=4)
+    plan = pctx.plan_decode(shapes=shapes, table_pages=W)
+    assert plan.cost == strategy_cost(
+        get_strategy("decode"), 2, 1, 8, 2, 64, pctx.sp_degree,
+        bytes_per_elem=4, S_kv=4096, table_pages=W,
+    )
+    pplan = pctx.plan_prefill(shapes=shapes, table_pages=W)
+    assert pplan.cost == strategy_cost(
+        get_strategy("prefill"), 2, 1, 8, 2, 64, pctx.sp_degree,
+        bytes_per_elem=4, S_kv=4096, table_pages=W,
+    )
+
+
 def test_choose_strategy_backcompat():
     from repro.core.api import choose_strategy
 

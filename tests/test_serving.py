@@ -113,6 +113,47 @@ def test_engine_continuous_batching_multiple_requests():
     assert s["mean_latency_s"] >= s["mean_ttft_s"] >= 0.0
 
 
+def test_eos_excluded_from_output_and_counted_separately():
+    """EOS semantics (PR4): the EOS token is a stop signal, not an emitted
+    token — it never lands in ``req.output``, never counts toward
+    ``max_new_tokens`` or ``stats()['tokens']`` throughput, and is tallied
+    separately in ``stats()['eos_stops']``."""
+    cfg, bundle, params = _setup()
+    prompt = [5, 17, 3, 42]
+    eng = ServingEngine(bundle, params, max_batch=2, max_len=64)
+    ref = eng.submit(prompt, max_new_tokens=8)
+    eng.run()
+    assert len(ref.output) == 8 and not ref.stopped_eos
+    assert eng.stats()["eos_stops"] == 0
+
+    eos = ref.output[3]
+    k = ref.output.index(eos)  # first occurrence ends the rerun
+    eng2 = ServingEngine(bundle, params, max_batch=2, max_len=64)
+    req = eng2.submit(prompt, max_new_tokens=8, eos_id=eos)
+    eng2.run()
+    assert req.stopped_eos and req.t_done is not None
+    assert req.output == ref.output[:k], "EOS itself must not be emitted"
+    s = eng2.stats()
+    assert s["tokens"] == k, "throughput counts emitted tokens only"
+    assert s["eos_stops"] == 1
+
+
+def test_eos_on_first_token_still_sets_ttft():
+    """A request whose very first sample is EOS emits nothing but still has
+    a first-token time (the model did produce a distribution)."""
+    cfg, bundle, params = _setup()
+    prompt = [5, 17, 3, 42]
+    eng = ServingEngine(bundle, params, max_batch=2, max_len=64)
+    ref = eng.submit(prompt, max_new_tokens=1)
+    eng.run()
+    eng2 = ServingEngine(bundle, params, max_batch=2, max_len=64)
+    req = eng2.submit(prompt, max_new_tokens=8, eos_id=ref.output[0])
+    eng2.run()
+    assert req.output == [] and req.stopped_eos
+    assert req.t_first is not None and req.t_done is not None
+    assert eng2.stats()["tokens"] == 0 and eng2.stats()["eos_stops"] == 1
+
+
 # ---------------------------------------------------------------------------
 # chunked prefill
 # ---------------------------------------------------------------------------

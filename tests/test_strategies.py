@@ -74,6 +74,15 @@ def test_sp_prefill_chunk():
 
 
 @pytest.mark.slow
+def test_sp_paged_serving():
+    """Paged serving steps on 8 devices: the page pool sharded over the SP
+    axis (block tables span devices), gathered views through the same
+    sp_prefill/sp_decode merges, chain equal to the single-device dense
+    oracle."""
+    _run_check("repro.testing.strategy_check", "paged")
+
+
+@pytest.mark.slow
 def test_sp_scan():
     _run_check("repro.testing.strategy_check", "scan", "scan_hybrid")
 
