@@ -50,6 +50,19 @@ def main() -> None:
     if proc.returncode != 0:
         print("measured-bench subprocess failed:", proc.stderr[-1000:])
 
+    # overlap executor bench needs 4 devices -> subprocess; writes
+    # benchmarks/BENCH_overlap.json (sequential vs pipelined wall time +
+    # modeled overlap + HLO dependency evidence)
+    print("=" * 72)
+    print("Overlap: sequential vs pipelined executor (4 simulated devices)")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_overlap"],
+        capture_output=True, text=True, env=env, timeout=3000,
+    )
+    print(proc.stdout[-2000:])
+    if proc.returncode != 0:
+        print("overlap-bench subprocess failed:", proc.stderr[-1000:])
+
     print("=" * 72)
     print("Serving: chunked prefill TTFT + planner link bytes per schedule")
     from benchmarks import bench_serving

@@ -45,6 +45,7 @@ from repro.core.compat import shard_map
 from repro.core.strategies import (
     CommCost,
     SPStrategy,
+    attention_compute_flops,
     get_strategy,
     ineligible_reason,
     resolve_strategy,
@@ -102,6 +103,47 @@ class ExecutionPlan:
     sp_axes: tuple[str, ...]
     sp_degree: int
     cost: CommCost | None = None
+    # Modeled per-device attention dot FLOPs of the planned pass (None for
+    # decode/prefill/scan plans) — the compute half of the overlap-aware
+    # ``max(compute, link)`` step-time model (docs/overlap.md).
+    compute_flops: float | None = None
+    # Whether the resolved schedule's transfers overlap compute (the
+    # SPStrategy.pipelines capability) — False schedules never get a
+    # pipelined time below the sequential one.
+    pipelines: bool = True
+
+    def modeled_times(
+        self,
+        *,
+        link_bw: float,
+        peak_flops: float,
+        bidir_links: bool = True,
+    ) -> dict | None:
+        """Sequential-vs-pipelined modeled wall time of the planned pass.
+
+        ``sequential_s`` charges compute + link serially (the legacy
+        merge→rotate dependency chain); ``pipelined_s`` is the overlap
+        executor's ``max(compute, link)``.  ``overlap_fraction`` is the
+        modeled saving — 0 when one term fully dominates already, and 0 by
+        construction for non-pipelining schedules (ulysses, window).
+        """
+        if self.cost is None or self.compute_flops is None:
+            return None
+        compute_s = self.compute_flops / peak_flops
+        seq = self.cost.step_time_s(
+            link_bw, compute_s, bidir_links=bidir_links, pipelined=False
+        )
+        pipe = self.cost.step_time_s(
+            link_bw, compute_s, bidir_links=bidir_links,
+            pipelined=self.pipelines,
+        )
+        return {
+            "compute_s": compute_s,
+            "link_s": self.cost.time_s(link_bw, bidir_links=bidir_links),
+            "sequential_s": seq,
+            "pipelined_s": pipe,
+            "overlap_fraction": (seq - pipe) / seq if seq > 0 else 0.0,
+        }
 
     def __call__(self, *args):
         fn = shard_map(
@@ -135,6 +177,11 @@ class ParallelContext:
     # Whether the fabric carries both ring directions at full rate (TPU ICI,
     # NVLink).  False makes the planner score total bytes, not max-direction.
     bidir_links: bool = True
+    # Run step schedules through the double-buffered overlap executor
+    # (core/schedule.py).  False serializes every transfer behind the step's
+    # compute — bitwise-identical results with the legacy merge→rotate
+    # dependency chain, for benchmarking and HLO verification.
+    overlap: bool = True
 
     @property
     def sp_degree(self) -> int:
@@ -218,6 +265,7 @@ class ParallelContext:
             causal=causal, window=window, scale=scale, impl=self.impl,
             block_q=self.block_q, block_k=self.block_k,
             block_q_bwd=self.block_q_bwd, block_k_bwd=self.block_k_bwd,
+            overlap=self.overlap,
         )
 
         hybrid = len(self.sp_axes) >= 2
@@ -253,6 +301,12 @@ class ParallelContext:
         desc = get_strategy(name)
         if desc.supports_window:
             hybrid = False  # window strategies flatten multi-axis themselves
+
+        compute_flops = attention_compute_flops(
+            B_loc, shapes.Sq, shapes.Hq, shapes.D, P_sp,
+            S_kv=shapes.seq_kv, causal=causal,
+            window=window if desc.supports_window else None,
+        )
 
         dp = self.data_axis
         seq = self.seq_spec()
@@ -305,6 +359,11 @@ class ParallelContext:
                 kind="attention", strategy=name, inner=inner, mesh=self.mesh,
                 in_specs=in_specs, out_specs=qspec, local_fn=local_fn,
                 sp_axes=self.sp_axes, sp_degree=P_sp, cost=cost,
+                compute_flops=compute_flops,
+                # The outer pod ring always prefetches, but the inner pass
+                # dominates the byte count — claim overlap only when the
+                # inner schedule can deliver it (ulysses inner cannot).
+                pipelines=inner_desc.pipelines,
             )
 
         why = ineligible_reason(
@@ -330,6 +389,7 @@ class ParallelContext:
             kind="attention", strategy=name, inner=None, mesh=self.mesh,
             in_specs=in_specs, out_specs=qspec, local_fn=local_fn,
             sp_axes=self.sp_axes, sp_degree=P_sp, cost=cost,
+            compute_flops=compute_flops, pipelines=desc.pipelines,
         )
 
     def _serving_cost(

@@ -5,12 +5,14 @@ communication of K and V, while TokenRing is utilized within individual nodes".
 
 Mapping to the production mesh ``(pod, data, model)``:
   * the sequence is sharded over ``(pod, model)`` jointly,
-  * the *outer* loop rotates each pod's whole local (K, V) shard across the
-    ``pod`` axis (one ppermute per pod step — the slow inter-pod links carry
-    the big, infrequent transfer),
-  * the *inner* computation is a full intra-pod TokenRing pass over ``model``
-    against whatever KV block is currently resident (fast intra-pod links
-    carry the frequent bidirectional Q/out traffic).
+  * the *outer* loop is the classic KV ``ring_schedule`` over the ``pod``
+    axis, run by the overlap executor — the slow inter-pod transfer of the
+    next pod's KV shard is issued against the resident copy and overlaps the
+    whole intra-pod pass (one big, infrequent transfer on the slow links),
+  * the *inner* "compute" of each outer step is a full intra-pod pass of any
+    hybrid-capable strategy over ``model`` against whatever KV block is
+    currently resident (fast intra-pod links carry the frequent
+    bidirectional Q/out traffic).
 
 Because TokenRing returns the accumulators to their home rank after every
 inner pass, merging across outer steps is local.
@@ -18,17 +20,14 @@ inner pass, merging across outer steps is local.
 
 from __future__ import annotations
 
-import jax
 from jax import lax
 
-from repro.core.merge import empty_partial, finalize, merge_partials
+from repro.core.merge import empty_partial, finalize
+from repro.core.ring_attention import ring_schedule
+from repro.core.schedule import execute_schedule
 from repro.core.strategies import get_strategy
 
 __all__ = ["hybrid_sp"]
-
-
-def _ring_perm(P: int, shift: int):
-    return [(r, (r + shift) % P) for r in range(P)]
 
 
 def hybrid_sp(
@@ -49,6 +48,7 @@ def hybrid_sp(
     block_k: int = 512,
     block_q_bwd: int | None = None,
     block_k_bwd: int | None = None,
+    overlap: bool = True,
     return_lse: bool = False,
     **inner_kwargs,
 ):
@@ -71,37 +71,26 @@ def hybrid_sp(
             f"strategy {inner!r}; accepted extras: "
             f"{sorted(desc.extra_kwargs) or 'none'}"
         )
-    n_pods = lax.psum(1, pod_axis)
+    n_pods = int(lax.psum(1, pod_axis))
     inner_fn = desc.fn
 
-    def inner_pass(k_cur, v_cur, kp_cur):
+    def inner_pass(qq, qp, k_cur, v_cur, kp_cur):
         return inner_fn(
-            q, k_cur, v_cur, q_pos, kp_cur,
+            qq, k_cur, v_cur, qp, kp_cur,
             axis_name=axis_name, causal=causal, window=window, scale=scale,
             impl=impl, block_q=block_q, block_k=block_k,
-            block_q_bwd=block_q_bwd, block_k_bwd=block_k_bwd, return_lse=True,
-            **inner_kwargs,
+            block_q_bwd=block_q_bwd, block_k_bwd=block_k_bwd,
+            overlap=overlap, return_lse=True, **inner_kwargs,
         )
 
-    out, lse = empty_partial(q.shape)
-
-    def step(carry, _):
-        k_cur, v_cur, kp_cur, out, lse = carry
-        # Rotate KV to the next pod first so the (slow) inter-pod transfer
-        # overlaps the whole intra-pod TokenRing pass.
-        k_nxt, v_nxt, kp_nxt = jax.tree.map(
-            lambda x: lax.ppermute(x, pod_axis, _ring_perm(n_pods, 1)),
-            (k_cur, v_cur, kp_cur),
-        )
-        o, l = inner_pass(k_cur, v_cur, kp_cur)
-        out, lse = merge_partials(out, lse, o, l)
-        return (k_nxt, v_nxt, kp_nxt, out, lse), None
-
-    carry = (k, v, k_pos, out, lse)
-    if n_pods > 1:
-        carry, _ = lax.scan(step, carry, None, length=n_pods - 1)
-    k_cur, v_cur, kp_cur, out, lse = carry
-    o, l = inner_pass(k_cur, v_cur, kp_cur)
-    out, lse = merge_partials(out, lse, o, l)
-    out, lse = finalize(out, lse)
+    bufs = {
+        "q": (q, q_pos),
+        "kv": (k, v, k_pos),
+        "acc": empty_partial(q.shape),
+    }
+    res = execute_schedule(
+        ring_schedule(n_pods), bufs, axis_name=pod_axis,
+        compute_fn=inner_pass, overlap=overlap,
+    )
+    out, lse = finalize(*res["acc"])
     return (out, lse) if return_lse else out

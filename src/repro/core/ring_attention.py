@@ -1,8 +1,12 @@
 """Ring Attention baselines (paper Figure 3a + the bidirectional-KV variant).
 
 Both functions run *inside* ``shard_map``: they receive the local sequence
-shard of q/k/v plus the global positions of the local rows, and communicate
-over ``axis_name`` with ``lax.ppermute``.
+shard of q/k/v plus the global positions of the local rows, and express their
+KV circulation as a ``core.schedule`` step schedule run by the
+double-buffered overlap executor — the shift of the next step's KV shard is
+issued against the copy already in hand, so the transfer shares the wire with
+the current flash block (the paper's async_send / compute overlap, now
+structural and verified by ``launch/hlo_analysis.overlap_report``).
 
 ``ring_attention_sp``  — the paper's baseline: Q stays home, the (K,V) pair
 rotates one step (+1) per iteration.  Exactly one ring direction is used —
@@ -21,29 +25,59 @@ Communication accounting per device (bytes, ``b`` = element size):
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.merge import empty_partial, finalize, merge_partials
+from repro.core.merge import empty_partial, finalize
+from repro.core.schedule import (
+    Compute,
+    Merge,
+    Schedule,
+    Send,
+    Step,
+    execute_schedule,
+)
 from repro.core.strategies import CommCost, register_strategy
 from repro.kernels.ops import flash_attention
 
 __all__ = [
     "ring_attention_sp",
     "ring_attention_bidir_sp",
+    "ring_schedule",
+    "ring_bidir_schedule",
     "ring_comm_cost",
     "ring_bidir_comm_cost",
 ]
 
 
-def _ring_perm(P: int, shift: int):
-    """Permutation sending rank r's data to rank (r + shift) % P."""
-    return [(r, (r + shift) % P) for r in range(P)]
+def ring_schedule(P: int) -> Schedule:
+    """Classic KV ring: ``P-1`` unidirectional ``+1`` shifts, each issued
+    before (and independent of) the flash against the resident copy; the last
+    block needs no shift.  Also the outer pod loop of ``core.hybrid``."""
+    final = Step(Compute("q", ("kv",), "p"), Merge("acc", "p"))
+    if P == 1:
+        return Schedule(epilogue=(final,))
+    step = Step(Send(("kv",), 1), Compute("q", ("kv",), "p"), Merge("acc", "p"))
+    return Schedule(
+        prologue=(step,), body=step, trips=P - 2, epilogue=(final,),
+        static=frozenset({"q"}),
+    )
 
 
-def _ppermute_tree(tree, axis_name, perm):
-    return jax.tree.map(lambda x: lax.ppermute(x, axis_name, perm), tree)
+def ring_bidir_schedule(P: int) -> Schedule:
+    """Bidirectional KV ring: the two half-shards rotate opposite ways; each
+    flash sees their concatenation."""
+    final = Step(Compute("q", ("kva", "kvb"), "p"), Merge("acc", "p"))
+    if P == 1:
+        return Schedule(epilogue=(final,))
+    step = Step(
+        Send(("kva",), 1), Send(("kvb",), -1),
+        Compute("q", ("kva", "kvb"), "p"), Merge("acc", "p"),
+    )
+    return Schedule(
+        prologue=(step,), body=step, trips=P - 2, epilogue=(final,),
+        static=frozenset({"q"}),
+    )
 
 
 def ring_attention_sp(
@@ -62,41 +96,29 @@ def ring_attention_sp(
     block_k: int = 512,
     block_q_bwd: int | None = None,
     block_k_bwd: int | None = None,
+    overlap: bool = True,
     return_lse: bool = False,
 ):
     """Classic Ring Attention: KV rotates +1, (P-1) unidirectional sends."""
-    P = lax.psum(1, axis_name)  # static under shard_map
+    P = int(lax.psum(1, axis_name))  # static under shard_map
 
-    def flash(qq, kk, vv, qp, kp):
+    def flash(qq, qp, kk, vv, kp):
         return flash_attention(
             qq, kk, vv, q_pos=qp, k_pos=kp, causal=causal, window=window,
             scale=scale, impl=impl, block_q=block_q, block_k=block_k,
             block_q_bwd=block_q_bwd, block_k_bwd=block_k_bwd,
         )
 
-    out, lse = empty_partial(q.shape)
-
-    def step(carry, _):
-        k_cur, v_cur, kp_cur, out, lse = carry
-        # Issue the rotation first so XLA can overlap the ICI DMA with the
-        # block compute (the paper's async_send / compute overlap).
-        k_nxt, v_nxt, kp_nxt = _ppermute_tree(
-            (k_cur, v_cur, kp_cur), axis_name, _ring_perm(P, 1)
-        )
-        o, l = flash(q, k_cur, v_cur, q_pos, kp_cur)
-        out, lse = merge_partials(out, lse, o, l)
-        return (k_nxt, v_nxt, kp_nxt, out, lse), None
-
-    if P > 1:
-        (k_cur, v_cur, kp_cur, out, lse), _ = lax.scan(
-            step, (k, v, k_pos, out, lse), None, length=P - 1
-        )
-    else:
-        k_cur, v_cur, kp_cur = k, v, k_pos
-    # Final block: no rotation needed afterwards.
-    o, l = flash(q, k_cur, v_cur, q_pos, kp_cur)
-    out, lse = merge_partials(out, lse, o, l)
-    out, lse = finalize(out, lse)
+    bufs = {
+        "q": (q, q_pos),
+        "kv": (k, v, k_pos),
+        "acc": empty_partial(q.shape),
+    }
+    res = execute_schedule(
+        ring_schedule(P), bufs, axis_name=axis_name, compute_fn=flash,
+        overlap=overlap,
+    )
+    out, lse = finalize(*res["acc"])
     return (out, lse) if return_lse else out
 
 
@@ -137,54 +159,38 @@ def ring_attention_bidir_sp(
     block_k: int = 512,
     block_q_bwd: int | None = None,
     block_k_bwd: int | None = None,
+    overlap: bool = True,
     return_lse: bool = False,
 ):
     """Bidirectional-KV ring: half the KV shard travels each direction."""
-    P = lax.psum(1, axis_name)
+    P = int(lax.psum(1, axis_name))
     S = k.shape[1]
-    assert S % 2 == 0, "bidirectional ring needs an even local KV length"
+    if S % 2:
+        raise ValueError(
+            f"ring_bidir splits the local KV shard across the two ring "
+            f"directions and needs an even local length; got S_loc={S} — "
+            f"pad the sequence or use strategy='ring'"
+        )
     half = S // 2
 
-    def flash(qq, kk, vv, qp, kp):
+    def flash(qq, qp, kk, vv, kp):
         return flash_attention(
             qq, kk, vv, q_pos=qp, k_pos=kp, causal=causal, window=window,
             scale=scale, impl=impl, block_q=block_q, block_k=block_k,
             block_q_bwd=block_q_bwd, block_k_bwd=block_k_bwd,
         )
 
-    ka, kb = k[:, :half], k[:, half:]
-    va, vb = v[:, :half], v[:, half:]
-    kpa, kpb = k_pos[:, :half], k_pos[:, half:]
-
-    out, lse = empty_partial(q.shape)
-
-    def step(carry, _):
-        (ka, va, kpa, kb, vb, kpb, out, lse) = carry
-        fwd = _ppermute_tree((ka, va, kpa), axis_name, _ring_perm(P, 1))
-        bwd = _ppermute_tree((kb, vb, kpb), axis_name, _ring_perm(P, -1))
-        o, l = flash(
-            q,
-            jnp.concatenate([ka, kb], axis=1),
-            jnp.concatenate([va, vb], axis=1),
-            q_pos,
-            jnp.concatenate([kpa, kpb], axis=1),
-        )
-        out, lse = merge_partials(out, lse, o, l)
-        return (*fwd, *bwd, out, lse), None
-
-    carry = (ka, va, kpa, kb, vb, kpb, out, lse)
-    if P > 1:
-        carry, _ = lax.scan(step, carry, None, length=P - 1)
-    (ka, va, kpa, kb, vb, kpb, out, lse) = carry
-    o, l = flash(
-        q,
-        jnp.concatenate([ka, kb], axis=1),
-        jnp.concatenate([va, vb], axis=1),
-        q_pos,
-        jnp.concatenate([kpa, kpb], axis=1),
+    bufs = {
+        "q": (q, q_pos),
+        "kva": (k[:, :half], v[:, :half], k_pos[:, :half]),
+        "kvb": (k[:, half:], v[:, half:], k_pos[:, half:]),
+        "acc": empty_partial(q.shape),
+    }
+    res = execute_schedule(
+        ring_bidir_schedule(P), bufs, axis_name=axis_name, compute_fn=flash,
+        overlap=overlap,
     )
-    out, lse = merge_partials(out, lse, o, l)
-    out, lse = finalize(out, lse)
+    out, lse = finalize(*res["acc"])
     return (out, lse) if return_lse else out
 
 

@@ -47,6 +47,7 @@ __all__ = [
     "registered_strategies",
     "ineligible_reason",
     "resolve_strategy",
+    "attention_compute_flops",
     "KV_RESIDENT_MARGIN",
     "LSE_BYTES",
 ]
@@ -82,6 +83,25 @@ class CommCost:
         bytes_ = self.max_direction if bidir_links else self.total
         return bytes_ / link_bw
 
+    def step_time_s(
+        self,
+        link_bw: float,
+        compute_s: float,
+        *,
+        bidir_links: bool = True,
+        pipelined: bool = True,
+    ) -> float:
+        """Modeled wall time of one whole pass of the schedule.
+
+        The double-buffered executor (``core/schedule.py``) issues every
+        transfer against data in hand at step entry, so a pipelined pass
+        costs ``max(compute, link)`` — comm hides under compute (or vice
+        versa).  ``pipelined=False`` models the legacy merge→rotate chain,
+        where every transfer waits for the step's flash: ``compute + link``.
+        """
+        link = self.time_s(link_bw, bidir_links=bidir_links)
+        return max(compute_s, link) if pipelined else compute_s + link
+
 
 @dataclass(frozen=True)
 class SPStrategy:
@@ -89,10 +109,13 @@ class SPStrategy:
 
     ``fn`` runs inside ``shard_map`` with the uniform signature
     ``fn(q, k, v, q_pos, k_pos, *, axis_name, causal, window, scale, impl,
-    block_q, block_k, block_q_bwd, block_k_bwd, return_lse=False, **extra)``
-    where ``extra`` is limited to the names declared in ``extra_kwargs``
-    (``block_q_bwd``/``block_k_bwd`` size the backward kernels' tiles and
-    default to the forward's — see ``docs/kernels.md``).
+    block_q, block_k, block_q_bwd, block_k_bwd, overlap=True,
+    return_lse=False, **extra)`` where ``extra`` is limited to the names
+    declared in ``extra_kwargs`` (``block_q_bwd``/``block_k_bwd`` size the
+    backward kernels' tiles and default to the forward's — see
+    ``docs/kernels.md``; ``overlap=False`` runs the step schedule with
+    comm serialized behind compute, the benchmarking/verification mode of
+    ``core/schedule.py`` — strategies without a step loop ignore it).
     """
 
     name: str
@@ -106,6 +129,12 @@ class SPStrategy:
     kv_resident: bool = False  # K/V never leave their home device
     head_divisible: bool = False  # needs Hq % P == 0 and Hkv % P == 0
     auto_eligible: bool = True  # considered by the "auto" planner
+    # Runs a step schedule whose transfers overlap compute (the executor's
+    # pipelined mode).  False for schedules with nothing to hide behind —
+    # ulysses' blocking all-to-alls, window's fetch-then-compute halo — so
+    # the planner's modeled_times never claims an overlap saving the
+    # implementation cannot deliver.
+    pipelines: bool = True
     # Serving-side schedules ("decode", "prefill") run replicated-Q against a
     # sequence-sharded resident cache: their fn signatures and partition specs
     # differ from the ring-attention family, so they are planned through
@@ -323,6 +352,36 @@ def resolve_strategy(
 
 # ---------------------------------------------------------------------------
 # shared closed-form helpers used by the built-in cost models
+
+
+def attention_compute_flops(
+    B: int,
+    S: int,
+    Hq: int,
+    D: int,
+    P: int,
+    *,
+    S_kv: int | None = None,
+    causal: bool = True,
+    window: int | None = None,
+) -> float:
+    """Per-device dot FLOPs of one SP attention forward pass.
+
+    ``4·B·S_loc·ctx·Hq·D`` (QKᵀ + PV), halved under causal masking (the
+    kernel's tile skip realizes the saving — docs/kernels.md).  Windowed
+    layers attend ~``min(window, halo context)`` keys per query instead (the
+    window clip subsumes the causal triangle — no double halving).  This is
+    the ``compute_est`` half of the planner's ``max(compute_est, link_time)``
+    step-time model (docs/overlap.md).
+    """
+    S_loc = S // max(P, 1)
+    ctx = S_kv or S
+    if window is not None:
+        # mirror window_attention_sp's halo exactly (core/window.py)
+        halo = min(max(P - 1, 0), ceil_div(window - 1, max(S_loc, 1)))
+        ctx = min(window, ctx, S_loc * (1 + halo))
+        return 4.0 * B * S_loc * ctx * Hq * D
+    return 4.0 * B * S_loc * ctx * Hq * D * (0.5 if causal else 1.0)
 
 
 def mean_ring_hops(P: int) -> float:

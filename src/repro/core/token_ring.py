@@ -2,25 +2,37 @@
 
 Both variants keep (K, V) **resident** on their home device — the defining
 property of TokenRing — and circulate queries plus flash-attention partials
-``(block_out, block_lse)`` instead.  They differ in how the partials travel:
+``(block_out, block_lse)`` instead.  Both are expressed as declarative
+step schedules (``core.schedule``) run by the double-buffered overlap
+executor, so every per-step transfer is issued against data already in hand
+and carries no dependency on the step's flash call — the paper's
+"transmission overlaps computation" claim is structural, not hoped-for.
 
 ``variant="faithful"`` — Algorithm 1 as written.  Q rotates ``+1`` per step;
   the partial computed at step ``i`` is sent *directly back* to the query's
-  home rank ``(j - i) mod P`` and merged there immediately.  On the paper's
-  full-mesh node (NVLink/OAM/PCIe) that send is one P2P hop; we express it as
-  a single ``lax.ppermute`` with distance ``i``.  On a TPU torus the same op
-  costs ``i`` neighbor-link traversals, so total hop-bytes grow as
-  ``O(P^2/2)`` — measured and reported in the roofline table as the
-  quantitative motivation for the TPU adaptation below.
+  home rank ``(j - i) mod P`` and merged there.  The executor pipelines the
+  homeward send **one step late**: during step ``i``'s flash the wire carries
+  step ``i-1``'s partial (already in hand), plus one drain hop after the last
+  block — same sends, same bytes, zero compute-blocked transfers.  On the
+  paper's full-mesh node that send is one P2P hop; on a TPU torus a
+  distance-``i`` permute costs ``i`` neighbor-link traversals, so total
+  hop-bytes grow as ``O(P^2/2)`` — measured and reported in the roofline
+  table as the quantitative motivation for the TPU adaptation below.
 
 ``variant="bidir"`` (TPU adaptation, the default) — *split-Q bidirectional
   co-rotation*.  The local Q block is split in half; each half travels with
   its own ``(out, lse)`` accumulator, one half rotating ``+1`` and the other
   ``-1``.  Every step issues two opposite-direction neighbor ppermutes →
   both directions of every ICI link are busy, which is precisely the paper's
-  bandwidth argument, with no far sends.  Per-direction per-step traffic is
-  ``(Q + O + lse)/2`` vs Ring-Attention's ``K+V`` (one direction), i.e. the
-  same 2x effective-bandwidth win the paper reports for MHA.
+  bandwidth argument, with no far sends.  The pipelined schedule lets the
+  accumulator **lag its query by one rank**: at step ``i`` the query is at
+  rank ``home+i`` computing partial ``p_i`` while the accumulator (merged
+  through ``p_{i-1}``) travels ``home+i-1 → home+i`` on the wire; it arrives
+  as the flash finishes and merges with ``p_i`` on the spot.  Every payload
+  is in hand at step entry, per-direction per-step traffic is unchanged —
+  ``(Q + O + lse)/2`` vs Ring-Attention's ``K+V`` (one direction), the same
+  2x effective-bandwidth win the paper reports for MHA — and the final
+  going-home hop is the same single ``+1`` permute as before.
 
 Communication accounting per device per direction (b = element size):
     faithful : fwd (P-1)*S*Hq*D*b (Q);  bwd sum_i i * S*(Hq*D+1)*b hop-bytes
@@ -30,127 +42,151 @@ The zigzag layout (``core.zigzag``) supplies the positions; the kernel's
 tile-level skip turns the masked half of the causal work into no-ops, which is
 what makes the balanced layout actually save FLOPs.  The same position
 predicate drives the *backward* kernels, so zigzag-causal training gets the
-same ~2x saving — see ``docs/kernels.md`` for the fwd/bwd kernel design
-(grids, VMEM scratch, the ``+ dlse`` cotangent term TokenRing's partial
-merges require, and the tile-skip arithmetic).
+same ~2x saving — see ``docs/kernels.md`` for the fwd/bwd kernel design and
+``docs/overlap.md`` for the schedule IR, the double-buffer timelines of both
+variants, and the resulting ``max(compute, link)`` step-time model.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
 from functools import partial
 
-from repro.core.merge import empty_partial, finalize, merge_partials
+from repro.core.merge import empty_partial, finalize
+from repro.core.schedule import (
+    Compute,
+    Merge,
+    Schedule,
+    Send,
+    Step,
+    execute_schedule,
+)
 from repro.core.strategies import CommCost, LSE_BYTES, itemsize, register_strategy
 from repro.kernels.ops import flash_attention
 
-__all__ = ["token_ring_sp", "token_ring_comm_cost", "token_ring_faithful_comm_cost"]
+__all__ = [
+    "token_ring_sp",
+    "token_ring_bidir_schedule",
+    "token_ring_faithful_schedule",
+    "token_ring_comm_cost",
+    "token_ring_faithful_comm_cost",
+]
 
 
-def _ring_perm(P: int, shift: int):
-    return [(r, (r + shift) % P) for r in range(P)]
+def token_ring_faithful_schedule(P: int) -> Schedule:
+    """Algorithm 1, pipelined: Q rotates ``+1``; the partial computed at step
+    ``i`` flies straight home (shift ``-i``) during step ``i+1``'s flash.
 
-
-def _ppermute_tree(tree, axis_name, perm):
-    return jax.tree.map(lambda x: lax.ppermute(x, axis_name, perm), tree)
-
-
-def _token_ring_faithful(q, k, v, q_pos, k_pos, *, axis_name, flash):
-    """Algorithm 1: Q rotates +1; partials fly straight home (distance -i)."""
-    P = lax.psum(1, axis_name)
-
-    out, lse = empty_partial(q.shape)
-
-    # Step 0: local block, partial already home — merge in place.
-    o, l = flash(q, k, v, q_pos, k_pos)
-    out, lse = merge_partials(out, lse, o, l)
-
-    q_cur, qp_cur = q, q_pos
+    Steps are unrolled — the homeward shift differs per step, which cannot
+    live in one scan body, and unrolling keeps each distinct
+    collective-permute visible to the roofline HLO parser.
+    """
+    local = Step(Compute("q", ("kv",), "p"), Merge("acc", "p"))
     if P == 1:
-        return finalize(out, lse)
+        return Schedule(prologue=(local,))
+    steps = [Step(Send(("q",), 1), Compute("q", ("kv",), "p"), Merge("acc", "p"))]
+    for i in range(1, P):
+        ops = []
+        if i <= P - 2:
+            ops.append(Send(("q",), 1))
+        if i >= 2:
+            # step i-1's partial (home = rank - (i-1)), in hand since last
+            # step — its send shares the wire with this step's flash.
+            ops.append(Send(("p",), -(i - 1), into=("ph",)))
+        ops.append(Compute("q", ("kv",), "p"))
+        if i >= 2:
+            ops.append(Merge("acc", "ph"))
+        steps.append(Step(*ops))
+    drain = Step(Send(("p",), -(P - 1), into=("ph",)), Merge("acc", "ph"))
+    return Schedule(prologue=(*steps, drain))
 
-    # NOTE on implementation: the homeward send distance differs per step
-    # (Algorithm 1's rank t = (j - step + 1) mod N), which cannot live inside
-    # a single lax.scan body with one static perm.  We unroll the P-1 steps —
-    # P is a small static mesh dimension, and unrolling also keeps each
-    # step's distinct collective-permute visible to the roofline HLO parser.
-    for i in range(1, int(P)):
-        # async_send Q to rank +1 (forward ring direction)...
-        q_cur, qp_cur = _ppermute_tree((q_cur, qp_cur), axis_name, _ring_perm(P, 1))
-        # ...compute the block for the Q just received (its home is j - i)...
-        o, l = flash(q_cur, k, v, qp_cur, k_pos)
-        # ...and send (block_out, block_lse) straight back to its home rank,
-        # concurrent with the forward Q traffic (bidirectional fabric use).
-        # One P2P hop on the paper's full mesh; distance-i permute here.
-        o_home, l_home = _ppermute_tree((o, l), axis_name, _ring_perm(P, -i))
-        out, lse = merge_partials(out, lse, o_home, l_home)
-    return finalize(out, lse)
+
+def token_ring_bidir_schedule(P: int) -> Schedule:
+    """Split-Q bidirectional co-rotation with the accumulator lagging its
+    query by one rank (see module docstring).
+
+    Per half: ``P`` flash blocks, ``P-1`` query hops, ``P`` accumulator hops
+    (``P-1`` pipelined + 1 going home) — byte-identical to the merge→rotate
+    formulation, with every send issued against step-entry data.
+    """
+    computes = (
+        Compute("qa", ("kv",), "pa"),
+        Compute("qb", ("kv",), "pb"),
+        Merge("aa", "pa"),
+        Merge("ab", "pb"),
+    )
+    if P == 1:
+        return Schedule(prologue=(Step(*computes),))
+    step0 = Step(Send(("qa",), 1), Send(("qb",), -1), *computes)
+    body = Step(
+        Send(("qa",), 1), Send(("aa",), 1),
+        Send(("qb",), -1), Send(("ab",), -1),
+        *computes,
+    )
+    last = Step(Send(("aa",), 1), Send(("ab",), -1), *computes)
+    home = Step(Send(("aa",), 1), Send(("ab",), -1))
+    return Schedule(
+        prologue=(step0,), body=body, trips=P - 2, epilogue=(last, home),
+        static=frozenset({"kv"}),
+    )
+
+
+def _token_ring_faithful(q, k, v, q_pos, k_pos, *, axis_name, flash,
+                         overlap=True):
+    """Algorithm 1: Q rotates +1; partials fly straight home (distance -i)."""
+    P = int(lax.psum(1, axis_name))
+    bufs = {
+        "q": (q, q_pos),
+        "kv": (k, v, k_pos),
+        "acc": empty_partial(q.shape),
+    }
+    out = execute_schedule(
+        token_ring_faithful_schedule(P), bufs, axis_name=axis_name,
+        compute_fn=lambda qq, qp, kk, vv, kp: flash(qq, kk, vv, qp, kp),
+        overlap=overlap,
+    )
+    return finalize(*out["acc"])
 
 
 def _token_ring_bidir(q, k, v, q_pos, k_pos, *, axis_name, flash,
-                      travel_dtype=jnp.float32):
+                      travel_dtype=jnp.float32, overlap=True):
     """Split-Q bidirectional co-rotation (TPU-native TokenRing).
 
     ``travel_dtype``: wire format of the traveling ``out`` accumulator
     (bfloat16 halves per-direction bytes at ~1e-3 merge rounding; lse stays
     fp32 either way).
     """
-    P = lax.psum(1, axis_name)
+    P = int(lax.psum(1, axis_name))
     S = q.shape[1]
-    assert S % 2 == 0, "token_ring bidir needs an even local Q length"
+    if S % 2:
+        raise ValueError(
+            f"token_ring variant='bidir' splits the local Q block across the "
+            f"two ring directions and needs an even local length; got "
+            f"S_loc={S} — pad the sequence or use variant='faithful'"
+        )
     half = S // 2
 
     qa, qb = q[:, :half], q[:, half:]
     qpa, qpb = q_pos[:, :half], q_pos[:, half:]
-    oa, la = empty_partial(qa.shape, dtype=travel_dtype)
-    ob, lb = empty_partial(qb.shape, dtype=travel_dtype)
-
-    def compute(carry):
-        qa, qpa, oa, la, qb, qpb, ob, lb = carry
-        pa, pla = flash(qa, k, v, qpa, k_pos)
-        pb, plb = flash(qb, k, v, qpb, k_pos)
-        oa, la = merge_partials(oa, la, pa, pla)
-        ob, lb = merge_partials(ob, lb, pb, plb)
-        return (qa, qpa, oa, la, qb, qpb, ob, lb)
-
-    def rotate(carry):
-        qa, qpa, oa, la, qb, qpb, ob, lb = carry
-        # Half A forward, half B backward — two concurrent opposite-direction
-        # neighbor permutes, the torus realization of the paper's
-        # "concurrent transmission of Q and block outputs".
-        qa, qpa, oa, la = _ppermute_tree(
-            (qa, qpa, oa, la), axis_name, _ring_perm(P, 1)
-        )
-        qb, qpb, ob, lb = _ppermute_tree(
-            (qb, qpb, ob, lb), axis_name, _ring_perm(P, -1)
-        )
-        return (qa, qpa, oa, la, qb, qpb, ob, lb)
-
-    carry = (qa, qpa, oa, la, qb, qpb, ob, lb)
-    if P == 1:
-        carry = compute(carry)
-        qa, qpa, oa, la, qb, qpb, ob, lb = carry
-    else:
-
-        def step(carry, _):
-            carry = compute(carry)
-            carry = rotate(carry)
-            return carry, None
-
-        carry, _ = lax.scan(step, carry, None, length=P - 1)
-        carry = compute(carry)  # last position, no Q forwarding afterwards
-        qa, qpa, oa, la, qb, qpb, ob, lb = carry
-        # Bring the accumulators home (Q is dropped for the final hop —
-        # the paper's "release unused data").
-        oa, la = _ppermute_tree((oa, la), axis_name, _ring_perm(P, 1))
-        ob, lb = _ppermute_tree((ob, lb), axis_name, _ring_perm(P, -1))
-
-    out = jnp.concatenate([oa, ob], axis=1)
-    lse = jnp.concatenate([la, lb], axis=1)
-    return finalize(out, lse)
+    bufs = {
+        "qa": (qa, qpa),
+        "qb": (qb, qpb),
+        "kv": (k, v, k_pos),
+        "aa": empty_partial(qa.shape, dtype=travel_dtype),
+        "ab": empty_partial(qb.shape, dtype=travel_dtype),
+    }
+    out = execute_schedule(
+        token_ring_bidir_schedule(P), bufs, axis_name=axis_name,
+        compute_fn=lambda qq, qp, kk, vv, kp: flash(qq, kk, vv, qp, kp),
+        overlap=overlap,
+    )
+    oa, la = out["aa"]
+    ob, lb = out["ab"]
+    o = jnp.concatenate([oa, ob], axis=1)
+    l = jnp.concatenate([la, lb], axis=1)
+    return finalize(o, l)
 
 
 def token_ring_sp(
@@ -171,6 +207,7 @@ def token_ring_sp(
     block_k: int = 512,
     block_q_bwd: int | None = None,
     block_k_bwd: int | None = None,
+    overlap: bool = True,
     return_lse: bool = False,
 ):
     """TokenRing SP attention over ``axis_name`` (inside shard_map)."""
@@ -184,12 +221,13 @@ def token_ring_sp(
 
     if variant == "faithful":
         out, lse = _token_ring_faithful(
-            q, k, v, q_pos, k_pos, axis_name=axis_name, flash=flash
+            q, k, v, q_pos, k_pos, axis_name=axis_name, flash=flash,
+            overlap=overlap,
         )
     elif variant == "bidir":
         out, lse = _token_ring_bidir(
             q, k, v, q_pos, k_pos, axis_name=axis_name, flash=flash,
-            travel_dtype=jnp.dtype(travel_dtype),
+            travel_dtype=jnp.dtype(travel_dtype), overlap=overlap,
         )
     else:
         raise ValueError(f"unknown token_ring variant: {variant!r}")

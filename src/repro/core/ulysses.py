@@ -42,6 +42,7 @@ def ulysses_sp(
     block_k: int = 512,
     block_q_bwd: int | None = None,
     block_k_bwd: int | None = None,
+    overlap: bool = True,  # uniform signature; no step loop to pipeline here
     return_lse: bool = False,
 ):
     P = lax.psum(1, axis_name)
@@ -100,5 +101,6 @@ register_strategy(
     ulysses_sp,
     comm_cost=ulysses_comm_cost,
     head_divisible=True,  # the paper's Table-1 limitation: SP degree <= heads
+    pipelines=False,  # blocking all-to-alls gate the local flash both ways
     description="DeepSpeed-Ulysses all-to-all head parallelism",
 )

@@ -4,22 +4,36 @@ For local attention with window ``W`` and contiguous layout, a device holding
 ``S_loc`` tokens only needs the last ``W-1`` tokens of its predecessors —
 ``ceil((W-1)/S_loc)`` neighbor shards.  Rotating the whole KV around the ring
 (TokenRing / Ring-Attention) would waste (P - halo) of the circulation, so
-this strategy fetches exactly the halo with that many ``+1`` ring shifts and
-runs one windowed flash call.  Used by recurrentgemma's local-attention layers
-and any ``window=`` config; requires ``layout="contig"``.
+this strategy fetches exactly the halo — expressed as a ``core.schedule``
+halo schedule (one ``+1`` flat ring shift per step, each forwarding the shard
+received the step before) — and runs one windowed flash call.  Used by
+recurrentgemma's local-attention layers and any ``window=`` config; requires
+``layout="contig"``.
 
 Communication per device: ``halo * 2*S_loc*Hkv*D*b`` — independent of P.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.core.collectives import flat_ring_shift, flat_size
+from repro.core.collectives import flat_size
+from repro.core.schedule import Compute, Schedule, Send, Step, execute_schedule
 from repro.core.strategies import CommCost, ceil_div, register_strategy
 from repro.kernels.ops import flash_attention
 
-__all__ = ["window_attention_sp", "window_comm_cost"]
+__all__ = ["window_attention_sp", "window_halo_schedule", "window_comm_cost"]
+
+
+def window_halo_schedule(halo: int) -> Schedule:
+    """``halo`` successive ``+1`` flat shifts (step ``j`` forwards the shard
+    that arrived at step ``j-1``, so ``kv{j}`` is the ``j``-th predecessor's
+    shard), then one flash over ``[kv{halo}, ..., kv1, kv0]`` — oldest first,
+    matching contiguous sequence order."""
+    steps = [
+        Step(Send((f"kv{j}",), 1, into=(f"kv{j + 1}",))) for j in range(halo)
+    ]
+    kv_order = tuple(f"kv{j}" for j in range(halo, -1, -1))
+    steps.append(Step(Compute("q", kv_order, "p")))
+    return Schedule(prologue=tuple(steps))
 
 
 def window_attention_sp(
@@ -38,30 +52,26 @@ def window_attention_sp(
     block_k: int = 512,
     block_q_bwd: int | None = None,
     block_k_bwd: int | None = None,
+    overlap: bool = True,
     return_lse: bool = False,
 ):
     P = flat_size(axis_name)
     S_loc = k.shape[1]
-    halo = min(int(P) - 1, -(-(window - 1) // S_loc))  # ceil, capped at P-1
+    halo = min(int(P) - 1, ceil_div(window - 1, S_loc))  # capped at P-1
 
-    ks, vs, kps = [k], [v], [k_pos]
-    blk = (k, v, k_pos)
-    for _ in range(halo):
-        # +1 flat shift: every rank receives its predecessor's shard.
-        blk = flat_ring_shift(blk, axis_name, 1)
-        ks.insert(0, blk[0])
-        vs.insert(0, blk[1])
-        kps.insert(0, blk[2])
+    def flash(qq, qp, kk, vv, kp):
+        return flash_attention(
+            qq, kk, vv, q_pos=qp, k_pos=kp, causal=causal, window=window,
+            scale=scale, impl=impl, block_q=block_q, block_k=block_k,
+            block_q_bwd=block_q_bwd, block_k_bwd=block_k_bwd,
+        )
 
-    k_ext = jnp.concatenate(ks, axis=1)
-    v_ext = jnp.concatenate(vs, axis=1)
-    kp_ext = jnp.concatenate(kps, axis=1)
-
-    out, lse = flash_attention(
-        q, k_ext, v_ext, q_pos=q_pos, k_pos=kp_ext, causal=causal,
-        window=window, scale=scale, impl=impl, block_q=block_q, block_k=block_k,
-        block_q_bwd=block_q_bwd, block_k_bwd=block_k_bwd,
+    bufs = {"q": (q, q_pos), "kv0": (k, v, k_pos)}
+    res = execute_schedule(
+        window_halo_schedule(halo), bufs, axis_name=axis_name,
+        compute_fn=flash, overlap=overlap,
     )
+    out, lse = res["p"]
     return (out, lse) if return_lse else out
 
 
@@ -87,6 +97,7 @@ register_strategy(
     requires_window=True,
     requires_layout="contig",  # halo semantics assume contiguous shards
     hybrid_inner_ok=False,  # handles multi-axis itself via flat ring shifts
+    pipelines=False,  # fetch-then-compute: the one flash waits for the halo
     extra_kwargs={"window"},  # the cost model needs the window size
     description="halo-exchange sliding-window attention (local layers)",
 )

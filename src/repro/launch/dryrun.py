@@ -27,7 +27,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import ARCHS, ASSIGNED  # noqa: E402
-from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo, overlap_report  # noqa: E402
 from repro.launch.mesh import make_pctx, make_production_mesh  # noqa: E402
 from repro.launch.train_step import make_train_step  # noqa: E402
 from repro.models import SHAPES, build_model, input_specs, runnable  # noqa: E402
@@ -230,6 +230,13 @@ def run_cell(arch, shape_name, *, multi_pod, strategy, out_dir, force=False,
                 "inner": plan.inner,
                 "predicted_link_bytes_fwd": plan.cost.fwd_bytes,
                 "predicted_link_bytes_bwd": plan.cost.bwd_bytes,
+                # Overlap-aware time model (docs/overlap.md): sequential
+                # charges compute + link serially, pipelined is the overlap
+                # executor's max(compute, link).
+                "modeled_times": plan.modeled_times(
+                    link_bw=LINK_BW, peak_flops=PEAK_FLOPS,
+                    bidir_links=pctx.bidir_links,
+                ),
                 # Kernel view: the plan now covers the backward too — which
                 # impl the flash custom_vjp dispatches and its tile sizes.
                 "kernel": {
@@ -276,6 +283,14 @@ def run_cell(arch, shape_name, *, multi_pod, strategy, out_dir, force=False,
         cost = {}
     hlo = compiled.as_text()
     stats = analyze_hlo(hlo, world=world)
+    # Dependency-graph audit of the compiled collectives: pipelined step
+    # schedules keep every scan-body permute free of same-step compute
+    # (overlap_report docstring has the exact guarantee).
+    ovl = overlap_report(hlo)
+    overlap_hlo = {
+        "total": ovl["total"],
+        "scan_body_total": ovl["scan_body_total"],
+    }
 
     per_dev = stats.as_dict()
     attn_full, attn_waste = _attention_waste_model(
@@ -324,6 +339,7 @@ def run_cell(arch, shape_name, *, multi_pod, strategy, out_dir, force=False,
         },
         "xla_cost_analysis": {k: v for k, v in cost.items() if isinstance(v, (int, float))},
         "hlo_stats_per_device": per_dev,
+        "overlap_hlo": overlap_hlo,
         "attention_model": {
             "full_flops_global": attn_full,
             "pallas_skip_waste_global": attn_waste,

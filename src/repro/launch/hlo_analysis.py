@@ -39,7 +39,7 @@ import re
 from collections import defaultdict
 from dataclasses import dataclass, field
 
-__all__ = ["analyze_hlo", "HloStats"]
+__all__ = ["analyze_hlo", "overlap_report", "HloStats"]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -238,6 +238,146 @@ def _ring_shift(pairs, world):
     if len(shifts) == 1:
         return shifts.pop()
     return None
+
+
+def _operand_refs(rhs: str) -> list[str]:
+    """Instruction names referenced as *data operands* of an HLO line.
+
+    Attached computations (``body=``, ``condition=``, ``calls=``,
+    ``to_apply=``, ``branch_computations=``) are stripped first so they never
+    create false data edges; everything else ``%``-referenced is an operand.
+    (Tuple-typed instructions put parentheses inside the *type*, so slicing
+    at the first ``)`` would miss e.g. ``get-tuple-element((...) %while.16)``.)
+    """
+    cut = re.sub(r"(?:body|condition|to_apply|calls)=%?[\w.\-]+", "", rhs)
+    cut = re.sub(r"branch_computations=\{[^}]*\}", "", cut)
+    return [r.lstrip("%") for r in re.findall(r"%([\w.\-]+)", cut)]
+
+
+_CALLED_COMP_RE = re.compile(
+    r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)"
+    r"|branch_computations=\{([^}]*)\}"
+)
+
+
+def overlap_report(hlo: str) -> dict:
+    """Per-computation dependency audit of collective-permutes vs dots.
+
+    The schedule executor's pipelining claim (docs/overlap.md) is a
+    *dependency-graph* property: in a pipelined step, no transfer consumes
+    anything the step computed, so within the loop-body computation no
+    ``collective-permute`` operand may transitively reach a ``dot`` (or a
+    fusion/call that contains one).  The legacy merge→rotate chain — and the
+    executor's ``overlap=False`` barrier mode — puts every permute downstream
+    of the step's flash.
+
+    Returns ``{computation: {"permutes": n, "compute_blocked": m}}`` for every
+    computation holding at least one permute, plus a ``"total"`` row and a
+    ``"scan_body_total"`` row restricted to while-loop body computations.
+
+    The scan-body row is the crisp assertion: a pipelined schedule's loop
+    body must show ``compute_blocked == 0`` and the sequential reference mode
+    must show every body permute blocked (``strategy_check overlap`` pins
+    both).  Unrolled prologue/epilogue steps live inlined in ENTRY where
+    *cross*-step dependencies (real and fine — step ``i+1`` consumes what
+    step ``i`` received) are indistinguishable from same-step ones, so for
+    fully unrolled schedules (``tokenring_faithful``) pipelining shows up as
+    a strictly *lower* total, not zero.
+    """
+    comps = _split_computations(hlo)
+
+    # A computation "has compute" if it holds a dot — or a custom-call, the
+    # form a Pallas flash kernel takes on TPU — transitively through the
+    # computations it calls (CPU HLO wraps dots in fusions).
+    calls: dict[str, set[str]] = {}
+    has_dot_direct: set[str] = set()
+    for name, lines in comps.items():
+        kids: set[str] = set()
+        for ln in lines:
+            if re.search(r"\b(?:dot[.\d]*|custom-call[.\d]*)\(", ln):
+                has_dot_direct.add(name)
+            for m in _CALLED_COMP_RE.finditer(ln):
+                if m.group(1):
+                    kids.add(m.group(1))
+                elif m.group(2):
+                    kids.update(
+                        c.lstrip("%") for c in re.findall(r"%?([\w.\-]+)", m.group(2))
+                    )
+        calls[name] = kids
+
+    def comp_has_dot(name: str, seen: frozenset = frozenset()) -> bool:
+        if name in has_dot_direct:
+            return True
+        if name in seen:
+            return False
+        return any(
+            comp_has_dot(c, seen | {name}) for c in calls.get(name, ()) if c in comps
+        )
+
+    while_bodies: set[str] = set()
+    for lines in comps.values():
+        for ln in lines:
+            wm = re.search(r"\bwhile\(.*?body=%?([\w.\-]+)", ln)
+            if wm:
+                while_bodies.add(wm.group(1))
+
+    report: dict[str, dict] = {}
+    total = {"permutes": 0, "compute_blocked": 0}
+    body_total = {"permutes": 0, "compute_blocked": 0}
+    for name, lines in comps.items():
+        defs: dict[str, list[str]] = {}
+        tainted: set[str] = set()  # instrs that are/contain/see compute
+        permutes: list[tuple[str, list[str]]] = []
+        for ln in lines:
+            dm = _DEF_RE.match(ln)
+            if not dm:
+                continue
+            nm, rhs = dm.group(1), dm.group(2)
+            refs = _operand_refs(rhs)
+            defs[nm] = refs
+            is_compute = bool(
+                re.search(r"\b(?:dot[.\d]*|custom-call[.\d]*)\(", rhs)
+            )
+            if not is_compute:
+                # any called computation (fusion, nested while body/cond,
+                # branches) that transitively holds a dot taints this instr
+                for cm in _CALLED_COMP_RE.finditer(rhs):
+                    called = [cm.group(1)] if cm.group(1) else re.findall(
+                        r"%?([\w.\-]+)", cm.group(2) or ""
+                    )
+                    if any(c in comps and comp_has_dot(c) for c in called):
+                        is_compute = True
+                        break
+            if is_compute:
+                tainted.add(nm)
+            # sync form on CPU; async `-start` half on TPU (the `-done`
+            # consumes the start, so counting starts alone is exact)
+            if re.search(r"\bcollective-permute(?:-start)?[.\d]*\(", rhs):
+                permutes.append((nm, refs))
+        if not permutes:
+            continue
+
+        # Propagate taint forward through the (acyclic) local def-use chains:
+        # an instruction is tainted if any operand is (iterative — HLO
+        # computations can be thousands of instructions deep).
+        changed = True
+        while changed:
+            changed = False
+            for nm, refs in defs.items():
+                if nm not in tainted and any(r in tainted for r in refs):
+                    tainted.add(nm)
+                    changed = True
+
+        blocked = sum(1 for _, refs in permutes if any(r in tainted for r in refs))
+        report[name] = {"permutes": len(permutes), "compute_blocked": blocked}
+        total["permutes"] += len(permutes)
+        total["compute_blocked"] += blocked
+        if name in while_bodies:
+            body_total["permutes"] += len(permutes)
+            body_total["compute_blocked"] += blocked
+    report["total"] = total
+    report["scan_body_total"] = body_total
+    return report
 
 
 def analyze_hlo(hlo: str, *, world: int, ring_sizes: dict | None = None) -> HloStats:

@@ -39,9 +39,23 @@ def _run_check(module, *args, timeout=900, devices=None):
 
 
 @pytest.mark.slow
-def test_strategy_forward_all():
-    out = _run_check("repro.testing.strategy_check", "strategies")
+@pytest.mark.parametrize("devices", [4, 8])
+def test_strategy_forward_all(devices):
+    """Every registered strategy through the schedule executor vs the
+    single-device oracle, on 4 and 8 fake devices."""
+    out = _run_check("repro.testing.strategy_check", "strategies", devices=devices)
     assert out.count("PASS") >= 15
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("devices", [4, 8])
+def test_schedule_overlap_executor(devices):
+    """Pipelined vs sequential executor modes: bitwise-identical outputs,
+    scan-body permutes free of same-step dots when pipelined (all blocked
+    sequential), per-direction collective bytes unchanged and matching the
+    registered comm_cost closed forms."""
+    out = _run_check("repro.testing.strategy_check", "overlap", devices=devices)
+    assert out.count("PASS overlap") >= 4
 
 
 @pytest.mark.slow
