@@ -15,7 +15,6 @@ Run directly (sets device count before jax import):
 """
 
 import os
-import sys
 
 if __name__ == "__main__":
     os.environ["XLA_FLAGS"] = (

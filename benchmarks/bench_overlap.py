@@ -27,7 +27,6 @@ Run directly (sets device count before jax import):
 import argparse
 import json
 import os
-import sys
 import time
 
 if __name__ == "__main__":

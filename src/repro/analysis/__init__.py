@@ -1,0 +1,18 @@
+"""Static analyzers for SP schedules, byte models, and kernel configs.
+
+Four passes, none of which runs or compiles device code:
+
+  * ``schedule_check`` — symbolic execution of a ``core.schedule.Schedule``
+    across all P ranks (deadlock freedom, matched sends, merge discipline,
+    coverage, carry-shape conservation);
+  * ``comm_audit``    — exact per-direction byte sums of a schedule walk,
+    pinned to the strategy's ``comm_cost`` closed form;
+  * ``kernel_lint``   — VMEM footprint estimates and tile-skip soundness for
+    ``FlashConfig`` grids;
+  * ``overlap_jaxpr`` — ppermute-vs-dot data-dependency pre-check on the
+    jaxpr (the no-compile analogue of ``launch.hlo_analysis.overlap_report``).
+
+Findings carry rule IDs from ``analysis.report.RULES``; ``launch/analyze.py``
+is the CLI gate.  Kept import-light: core modules import only
+``analysis.preconditions`` (the shared error-message catalog).
+"""

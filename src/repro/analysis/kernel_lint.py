@@ -1,0 +1,210 @@
+"""Static Pallas kernel-config lints: VMEM footprint, grid coverage,
+tile-skip soundness, and the shared divisibility preconditions.
+
+Nothing here compiles or interprets a kernel.  The VMEM estimate prices the
+exact BlockSpec/scratch shapes the kernels declare
+(``kernels.flash_attention.kernel_buffer_shapes``); the tile-skip check
+evaluates the kernels' *own* ``tile_skip`` predicate on concrete position
+tiles and cross-examines it against exhaustive per-element visibility — a
+skipped tile containing one visible (query, key) pair is attention mass
+silently dropped (KERN-LIVE-SKIP).
+
+VMEM model: the Mosaic pipeline double-buffers every in/out block (fetch of
+grid step ``i+1`` overlaps compute of ``i``), scratch accumulators are
+single-buffered:
+
+    footprint = 2 * (in_blocks + out_blocks) + scratch
+
+against a ~16 MiB per-core budget (:data:`VMEM_BUDGET_BYTES`).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.preconditions import check_tile_divisible, finding
+from repro.analysis.report import Finding
+
+__all__ = [
+    "VMEM_BUDGET_BYTES",
+    "vmem_estimate",
+    "vmem_findings",
+    "grid_findings",
+    "tile_skip_findings",
+    "lint_flash_config",
+]
+
+# Per-core VMEM on current TPU generations (the budget pallas kernels must
+# fit refs + scratch into; see the accelerator guide).
+VMEM_BUDGET_BYTES = 16 * 2**20
+
+_KINDS = ("fwd", "bwd_dq", "bwd_dkv")
+
+
+def _elem_bytes(elem: str, data_bytes: int) -> int:
+    return {"data": data_bytes, "f32": 4, "i32": 4}[elem]
+
+
+def vmem_estimate(
+    kind: str, *, block_q: int, block_k: int, D: int, data_bytes: int
+) -> int:
+    """Estimated VMEM bytes of one kernel's per-grid-step working set."""
+    from repro.kernels.flash_attention import kernel_buffer_shapes
+
+    shapes = kernel_buffer_shapes(kind, block_q=block_q, block_k=block_k, D=D)
+    pipelined = sum(
+        int(np.prod(shape)) * _elem_bytes(elem, data_bytes)
+        for part in ("in", "out")
+        for shape, elem in shapes[part]
+    )
+    scratch = sum(
+        int(np.prod(shape)) * _elem_bytes(elem, data_bytes)
+        for shape, elem in shapes["scratch"]
+    )
+    return 2 * pipelined + scratch
+
+
+def vmem_findings(
+    cfg,
+    *,
+    D: int,
+    data_bytes: int,
+    subject: str,
+    budget: int = VMEM_BUDGET_BYTES,
+):
+    """KERN-VMEM findings for a ``FlashConfig``'s fwd + bwd kernels."""
+    findings: list[Finding] = []
+    blocks = {
+        "fwd": (cfg.block_q, cfg.block_k),
+        "bwd_dq": (cfg.bwd_block_q, cfg.bwd_block_k),
+        "bwd_dkv": (cfg.bwd_block_q, cfg.bwd_block_k),
+    }
+    for kind in _KINDS:
+        bq, bk = blocks[kind]
+        est = vmem_estimate(
+            kind, block_q=bq, block_k=bk, D=D, data_bytes=data_bytes
+        )
+        if est > budget:
+            findings.append(
+                Finding(
+                    "KERN-VMEM",
+                    subject,
+                    f"{kind} kernel at block_q={bq}, block_k={bk}, D={D}, "
+                    f"{data_bytes}-byte data needs ~{est / 2**20:.1f} MiB "
+                    f"VMEM (budget {budget / 2**20:.0f} MiB)",
+                )
+            )
+    return findings
+
+
+def grid_findings(
+    Sq: int, Sk: int, *, block_q: int, block_k: int, subject: str
+):
+    """KERN-GRID-COVER: the grid must tile each sequence exactly once."""
+    findings: list[Finding] = []
+    for axis, S, b in (("q", Sq, block_q), ("kv", Sk, block_k)):
+        blk = min(b, S)
+        if blk <= 0 or S % blk:
+            findings.append(
+                Finding(
+                    "KERN-GRID-COVER",
+                    subject,
+                    f"{axis} axis: {S} rows do not tile into {blk}-row "
+                    f"blocks ({S} % {blk} = {S % blk if blk else S}) — some "
+                    f"rows would be computed twice or never",
+                )
+            )
+    return findings
+
+
+def tile_skip_findings(
+    q_pos,
+    k_pos,
+    *,
+    block_q: int,
+    block_k: int,
+    causal: bool,
+    window: int | None,
+    subject: str,
+    skip_fn=None,
+):
+    """KERN-LIVE-SKIP: the skip predicate must never kill a live tile.
+
+    ``q_pos``/``k_pos`` are concrete ``(B, S)`` position layouts (contig,
+    zigzag, ring-rotated...).  ``skip_fn(q_pos_tile, k_pos_tile, causal=...,
+    window=...)`` defaults to the kernels' own ``tile_skip``; it is
+    injectable so mutation tests can prove the lint catches a corrupted
+    predicate.  Visibility is checked exhaustively per element with the
+    kernels' ``tile_mask`` — the ground truth the predicate must respect.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention import tile_mask, tile_skip
+
+    if skip_fn is None:
+        skip_fn = tile_skip
+    q_pos = np.asarray(q_pos)
+    k_pos = np.asarray(k_pos)
+    B, Sq = q_pos.shape
+    Sk = k_pos.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    findings: list[Finding] = []
+    if Sq % bq or Sk % bk:
+        return findings  # grid_findings owns this defect
+    for b in range(B):
+        for iq in range(Sq // bq):
+            qp = jnp.asarray(q_pos[b, iq * bq:(iq + 1) * bq])
+            for ik in range(Sk // bk):
+                kp = jnp.asarray(k_pos[b, ik * bk:(ik + 1) * bk])
+                skip = bool(skip_fn(qp, kp, causal=causal, window=window))
+                if not skip:
+                    continue
+                visible = bool(
+                    jnp.any(tile_mask(qp, kp, causal=causal, window=window))
+                )
+                if visible:
+                    findings.append(
+                        Finding(
+                            "KERN-LIVE-SKIP",
+                            subject,
+                            f"batch {b}, q-tile {iq}, kv-tile {ik} "
+                            f"(block_q={bq}, block_k={bk}, causal={causal}, "
+                            f"window={window}): predicate skips a tile with "
+                            f"visible (query, key) pairs",
+                        )
+                    )
+    return findings
+
+
+def lint_flash_config(
+    cfg,
+    *,
+    Sq: int,
+    Sk: int,
+    D: int,
+    data_bytes: int,
+    q_pos=None,
+    k_pos=None,
+    subject: str,
+):
+    """All kernel lints for one ``FlashConfig`` at one shape point."""
+    findings = vmem_findings(
+        cfg, D=D, data_bytes=data_bytes, subject=subject
+    )
+    for bq, bk in {(cfg.block_q, cfg.block_k),
+                   (cfg.bwd_block_q, cfg.bwd_block_k)}:
+        findings += grid_findings(
+            Sq, Sk, block_q=bq, block_k=bk, subject=subject
+        )
+        findings += finding(
+            "PRE-TILE-DIV", subject, check_tile_divisible(Sq, bq)
+        )
+        findings += finding(
+            "PRE-TILE-DIV", subject, check_tile_divisible(Sk, bk)
+        )
+    if q_pos is not None and k_pos is not None and not findings:
+        findings += tile_skip_findings(
+            q_pos, k_pos, block_q=cfg.block_q, block_k=cfg.block_k,
+            causal=cfg.causal, window=cfg.window, subject=subject,
+        )
+    return findings

@@ -1,0 +1,98 @@
+"""Shared precondition catalog: one message source for runtime ``ValueError``s
+and static findings.
+
+The divisibility preconditions scattered across ``core/ring_attention.py``,
+``core/token_ring.py``, ``core/zigzag.py`` and ``kernels/ops._pick_block``
+each used to carry a private message string; the static analyzer would have
+had to duplicate them to report the same defect ahead of time.  Instead, each
+precondition lives here exactly once as a ``check_*`` function returning a
+message (or None when satisfied); ``require`` turns a message into the
+runtime ``ValueError``, and :func:`finding` turns one into an
+``analysis.report.Finding`` for the CLI gate — same words either way.
+
+This module is imported by ``repro.core`` at module load, so it must stay
+dependency-light: only ``analysis.report`` (pure stdlib) is imported.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.report import Finding
+
+__all__ = [
+    "require",
+    "finding",
+    "check_even_split",
+    "check_zigzag_divisible",
+    "check_tile_divisible",
+    "pick_block",
+]
+
+
+def require(message: str | None) -> None:
+    """Raise the catalog message as the runtime ``ValueError`` (no-op on None)."""
+    if message is not None:
+        raise ValueError(message)
+
+
+def finding(rule: str, subject: str, message: str | None) -> list[Finding]:
+    """Wrap a catalog message as a static finding (empty list on None)."""
+    if message is None:
+        return []
+    return [Finding(rule, subject, message)]
+
+
+def check_even_split(
+    S_loc: int, *, what: str, who: str, alternative: str
+) -> str | None:
+    """PRE-EVEN-SPLIT: bidirectional schedules halve a local shard.
+
+    ``what`` names the split tensor ("Q block" / "KV shard"), ``who`` the
+    strategy spelling used in the message, ``alternative`` the escape hatch.
+    """
+    if S_loc % 2 == 0:
+        return None
+    return (
+        f"{who} splits the local {what} across the two ring directions and "
+        f"needs an even local length; got S_loc={S_loc} — pad the sequence "
+        f"or use {alternative}"
+    )
+
+
+def check_zigzag_divisible(S: int, P: int) -> str | None:
+    """PRE-ZIGZAG-DIV: the balanced causal layout needs 2 chunks per rank."""
+    if S % (2 * P) == 0:
+        return None
+    return (
+        f"zigzag layout needs the sequence length divisible by 2P "
+        f"(2 chunks per rank); got S={S}, P={P} — pad the sequence to a "
+        f"multiple of {2 * P} or use layout='contig'"
+    )
+
+
+def check_tile_divisible(s: int, target: int) -> str | None:
+    """PRE-TILE-DIV: a sequence that needs tiling must admit a >=8-row tile.
+
+    Mirrors ``kernels.ops._pick_block``: the largest power-of-two block
+    ``<= target`` dividing ``s``; degrading below the sublane minimum (8)
+    is a perf cliff, not a fallback.
+    """
+    b = min(target, s)
+    while s % b:
+        b //= 2
+    if s > target and b < min(8, target):
+        return (
+            f"sequence length {s} has no power-of-two tile in "
+            f"[{min(8, target)}, {target}] (best divisor: {b}); pad it to a "
+            f"multiple of 8 (masked PAD_POS sentinel rows are free) or pass "
+            f"a block size that divides it"
+        )
+    return None
+
+
+def pick_block(s: int, target: int) -> int:
+    """The block ``check_tile_divisible`` vouches for (raises when it can't)."""
+    require(check_tile_divisible(s, target))
+    b = min(target, s)
+    while s % b:
+        b //= 2
+    return b

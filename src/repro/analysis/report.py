@@ -1,0 +1,152 @@
+"""Finding records, the rule catalog, and the findings-per-rule report.
+
+Every analyzer pass in ``repro.analysis`` emits :class:`Finding` objects
+tagged with a rule ID from :data:`RULES`.  The IDs are stable API: mutation
+tests assert on them, CI fails on any of them, and ``docs/analysis.md``
+documents one row per ID.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field
+
+__all__ = ["Finding", "Report", "RULES"]
+
+# Rule catalog: ID -> one-line description.  Grouped by analyzer pass.
+RULES: dict[str, str] = {
+    # schedule_check — rank-symbolic walk of a core.schedule.Schedule
+    "SCHED-DEADLOCK": (
+        "a Send's shift is 0 mod P: every rank posts a receive no other rank "
+        "ever sends — the ring waits forever"
+    ),
+    "SCHED-UNMATCHED": (
+        "a receive slot is written by more than one message in one step "
+        "(two Sends land in the same buffer) — unmatched/colliding sends"
+    ),
+    "SCHED-VALIDATE": (
+        "the schedule fails core.schedule.Schedule.validate (aliasing "
+        "writes, unknown reads, bad body/static discipline)"
+    ),
+    "SCHED-MERGE-MISMATCH": (
+        "a Merge folds a partial belonging to a different query than the "
+        "accumulator's (e.g. a flipped shift direction desynchronized the "
+        "accumulator from its co-rotating query), or the final accumulator "
+        "ends on the wrong rank"
+    ),
+    "SCHED-DUP-COVER": (
+        "an output accumulates the same (kv_home, kv_part) block twice — "
+        "double-merged partials silently skew the softmax denominator"
+    ),
+    "SCHED-COVERAGE": (
+        "an output never accumulates some (kv_home, kv_part) block the "
+        "strategy promises to attend to — dropped send or short trip count"
+    ),
+    "SCHED-SHAPE": (
+        "carry shapes are not conserved: a Merge folds mismatched row "
+        "fractions, or a scan-body trip changes a carried buffer's shape"
+    ),
+    # comm_audit — byte conservation against the comm_cost closed form
+    "COMM-DRIFT": (
+        "the per-direction bytes the schedule actually sends differ from the "
+        "registered comm_cost closed form — the auto-planner would arbitrate "
+        "on numbers the wire does not match"
+    ),
+    "COMM-UNSPECED": (
+        "a schedule sends a buffer with no BufferSpec — the audit cannot "
+        "price it"
+    ),
+    # kernel_lint — FlashConfig VMEM / grid / tile-skip lints
+    "KERN-VMEM": (
+        "estimated VMEM footprint of a kernel config (refs + scratch, "
+        "double-buffered) exceeds the per-core budget"
+    ),
+    "KERN-GRID-COVER": (
+        "the kernel grid does not tile the sequence exactly: grid_size * "
+        "block != S (rows computed twice or never)"
+    ),
+    "KERN-LIVE-SKIP": (
+        "the tile-skip predicate skips a tile that contains at least one "
+        "visible (query, key) pair — silently dropped attention mass"
+    ),
+    # preconditions — shared divisibility/message catalog
+    "PRE-EVEN-SPLIT": (
+        "a bidirectional split needs an even local sequence length "
+        "(token_ring bidir splits Q, ring_bidir splits KV)"
+    ),
+    "PRE-ZIGZAG-DIV": (
+        "zigzag layout needs the global sequence length divisible by 2P"
+    ),
+    "PRE-TILE-DIV": (
+        "the sequence length admits no power-of-two tile >= the sublane "
+        "minimum (_pick_block would degrade to near-per-row grid steps)"
+    ),
+    # overlap_jaxpr — jaxpr-level overlap pre-check
+    "OVLP-BLOCKED": (
+        "a strategy that declares pipelines=True has a scan-body ppermute "
+        "data-depending on a same-step dot_general — the transfer cannot "
+        "overlap the flash"
+    ),
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at one site."""
+
+    rule: str
+    subject: str  # strategy / kernel-config / shape-point identifier
+    detail: str
+
+    def __post_init__(self):
+        if self.rule not in RULES:
+            raise ValueError(f"unknown rule ID {self.rule!r}")
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.subject}: {self.detail}"
+
+
+@dataclass
+class Report:
+    """Accumulated findings with per-rule grouping and text rendering."""
+
+    findings: list[Finding] = field(default_factory=list)
+    checked: Counter = field(default_factory=Counter)  # pass name -> sites
+
+    def extend(self, findings) -> None:
+        self.findings.extend(findings)
+
+    def note_checked(self, pass_name: str, n: int = 1) -> None:
+        self.checked[pass_name] += n
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def by_rule(self) -> dict[str, list[Finding]]:
+        out: dict[str, list[Finding]] = {}
+        for f in self.findings:
+            out.setdefault(f.rule, []).append(f)
+        return out
+
+    def render(self, *, verbose: bool = False) -> str:
+        lines = []
+        for pass_name in sorted(self.checked):
+            lines.append(
+                f"  checked {pass_name}: {self.checked[pass_name]} sites"
+            )
+        grouped = self.by_rule()
+        for rule in sorted(RULES):
+            hits = grouped.get(rule, [])
+            if hits:
+                lines.append(f"  rule {rule}: {len(hits)} finding(s)")
+                for f in hits:
+                    lines.append(f"    - {f.subject}: {f.detail}")
+            elif verbose:
+                lines.append(f"  rule {rule}: clean")
+        verdict = (
+            "OK: 0 findings"
+            if self.ok
+            else f"FAIL: {len(self.findings)} finding(s)"
+        )
+        return "\n".join([*lines, verdict])

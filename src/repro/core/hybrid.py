@@ -22,6 +22,7 @@ from __future__ import annotations
 
 from jax import lax
 
+from repro.analysis.preconditions import check_even_split, require
 from repro.core.merge import empty_partial, finalize
 from repro.core.ring_attention import ring_schedule
 from repro.core.schedule import execute_schedule
@@ -71,6 +72,13 @@ def hybrid_sp(
             f"strategy {inner!r}; accepted extras: "
             f"{sorted(desc.extra_kwargs) or 'none'}"
         )
+    # Surface the inner schedule's split precondition at hybrid entry rather
+    # than n_pods outer steps in (same catalog message either place).
+    if inner == "tokenring":
+        require(check_even_split(
+            q.shape[1], what="Q block", who="token_ring variant='bidir'",
+            alternative="variant='faithful'",
+        ))
     n_pods = int(lax.psum(1, pod_axis))
     inner_fn = desc.fn
 

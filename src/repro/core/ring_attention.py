@@ -25,14 +25,16 @@ Communication accounting per device (bytes, ``b`` = element size):
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 from jax import lax
 
+from repro.analysis.preconditions import check_even_split, require
 from repro.core.merge import empty_partial, finalize
 from repro.core.schedule import (
+    BufferSpec,
     Compute,
     Merge,
     Schedule,
+    ScheduleSpec,
     Send,
     Step,
     execute_schedule,
@@ -44,7 +46,9 @@ __all__ = [
     "ring_attention_sp",
     "ring_attention_bidir_sp",
     "ring_schedule",
+    "ring_spec",
     "ring_bidir_schedule",
+    "ring_bidir_spec",
     "ring_comm_cost",
     "ring_bidir_comm_cost",
 ]
@@ -64,6 +68,19 @@ def ring_schedule(P: int) -> Schedule:
     )
 
 
+def ring_spec(P: int, **_) -> ScheduleSpec:
+    """Analyzer model of the classic KV ring (``analysis.schedule_check``)."""
+    return ScheduleSpec(
+        schedule=ring_schedule(P),
+        buffers={
+            "q": BufferSpec(role="q", positions=True),
+            "kv": BufferSpec(role="kv", heads="kv", positions=True),
+            "acc": BufferSpec(role="acc", lse=True, bound_q="q"),
+        },
+        out=("acc",),
+    )
+
+
 def ring_bidir_schedule(P: int) -> Schedule:
     """Bidirectional KV ring: the two half-shards rotate opposite ways; each
     flash sees their concatenation."""
@@ -77,6 +94,26 @@ def ring_bidir_schedule(P: int) -> Schedule:
     return Schedule(
         prologue=(step,), body=step, trips=P - 2, epilogue=(final,),
         static=frozenset({"q"}),
+    )
+
+
+def ring_bidir_spec(P: int, **_) -> ScheduleSpec:
+    """Analyzer model of the bidirectional KV ring: two half-KV parts rotate
+    opposite ways; every rank must see both parts of every home."""
+    return ScheduleSpec(
+        schedule=ring_bidir_schedule(P),
+        buffers={
+            "q": BufferSpec(role="q", positions=True),
+            "kva": BufferSpec(
+                role="kv", part=0, frac=0.5, heads="kv", positions=True
+            ),
+            "kvb": BufferSpec(
+                role="kv", part=1, frac=0.5, heads="kv", positions=True
+            ),
+            "acc": BufferSpec(role="acc", lse=True, bound_q="q"),
+        },
+        out=("acc",),
+        n_kv_parts=2,
     )
 
 
@@ -165,12 +202,9 @@ def ring_attention_bidir_sp(
     """Bidirectional-KV ring: half the KV shard travels each direction."""
     P = int(lax.psum(1, axis_name))
     S = k.shape[1]
-    if S % 2:
-        raise ValueError(
-            f"ring_bidir splits the local KV shard across the two ring "
-            f"directions and needs an even local length; got S_loc={S} — "
-            f"pad the sequence or use strategy='ring'"
-        )
+    require(check_even_split(
+        S, what="KV shard", who="ring_bidir", alternative="strategy='ring'",
+    ))
     half = S // 2
 
     def flash(qq, qp, kk, vv, kp):
@@ -198,6 +232,7 @@ register_strategy(
     "ring",
     ring_attention_sp,
     comm_cost=ring_comm_cost,
+    schedule_spec=ring_spec,
     description="Ring Attention baseline: KV rotates +1, one link direction",
 )
 
@@ -205,6 +240,7 @@ register_strategy(
     "ring_bidir",
     ring_attention_bidir_sp,
     comm_cost=ring_bidir_comm_cost,
+    schedule_spec=ring_bidir_spec,
     # The intra-pod half of the hybrid already has KV arriving from the pod
     # ring; splitting that transient shard across both directions again is
     # not implemented (use "ring" or "tokenring" inside).

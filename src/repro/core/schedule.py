@@ -53,7 +53,7 @@ Grammar, worked timelines, and the ``max(compute, link)`` cost consequence:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, Mapping
 
 __all__ = [
     "Send",
@@ -62,6 +62,9 @@ __all__ = [
     "Step",
     "Schedule",
     "ScheduleError",
+    "BufferSpec",
+    "ScheduleSpec",
+    "step_messages",
     "execute_schedule",
 ]
 
@@ -216,6 +219,90 @@ class Schedule:
             check_step(self.body, "body", in_body=True)
         for i, step in enumerate(self.epilogue):
             check_step(step, f"epilogue[{i}]", in_body=False)
+
+
+# ---------------------------------------------------------------------------
+# Rank-symbolic walk hook (consumed by ``repro.analysis``)
+#
+# A Schedule is rank-agnostic SPMD: every rank runs the same ops, so a single
+# Send op is really P point-to-point messages ``r -> (r + shift) % P``.
+# ``step_messages`` materializes that view for one step, and the two spec
+# dataclasses below let a strategy module declare, next to the schedule
+# builder itself, what each buffer *is* (role, row fraction, wire dtype,
+# sidecar rows) — everything the static checkers need to walk all P ranks and
+# price every transfer without running or compiling anything.
+
+
+@dataclass(frozen=True)
+class BufferSpec:
+    """Static description of one schedule buffer for rank-symbolic analysis.
+
+    ``role``: ``"q"`` — a ``(q, q_pos)`` pair; ``"kv"`` — a ``(k, v, k_pos)``
+    triple; ``"acc"`` — an ``(out, lse)`` partial/accumulator.
+    ``part``: which split of the local shard this is (split-Q halves, split-KV
+    halves); ``frac`` is the fraction of the local sequence rows it holds.
+    ``heads``: ``"q"`` (Hq-sized) or ``"kv"`` (Hkv-sized).
+    ``elem``: wire dtype of the payload tensor(s) — ``"input"`` (q/k/v dtype,
+    the planner's ``bytes_per_elem``), ``"travel"`` (the ``travel_dtype``
+    knob), or ``"f32"``.  Positions are always int32, lse always float32.
+    ``bound_q``: for accumulators, the name of the query buffer whose partials
+    this accumulator collects (coverage is checked against that query).
+    ``virtual``: the buffer is *created by the schedule* (a Send ``into`` or a
+    Compute output) rather than being part of the initial buffer dict — it is
+    priced when sent but carries no initial value.
+    """
+
+    role: str
+    part: int = 0
+    frac: float = 1.0
+    heads: str = "q"
+    elem: str = "input"
+    positions: bool = False  # an int32 position row travels with the payload
+    lse: bool = False  # an fp32 lse row travels with the payload
+    bound_q: str | None = None
+    virtual: bool = False
+
+
+@dataclass(frozen=True)
+class ScheduleSpec:
+    """A concrete :class:`Schedule` plus the buffer metadata the static
+    analyzers (``repro.analysis``) need to symbolically execute it across all
+    P ranks.  Strategy modules register a ``schedule_spec(P, **dims)`` factory
+    returning one of these alongside their ``comm_cost`` model.
+
+    ``out``: buffer names holding the final per-rank result, in local row
+    order.  ``n_kv_parts``: how many KV splits circulate (bidirectional KV
+    rings use 2).  ``torus_hops``: price a distance-``d`` send as ``d``
+    neighbor-link traversals (TokenRing Algorithm 1 on a torus) instead of
+    shortest-path hops.  ``expected_kv(P, rank)``: the exact set of
+    ``(kv_home, kv_part)`` every output must cover — defaults to all parts of
+    all ranks (full attention); windowed halo schedules override it.
+    """
+
+    schedule: Schedule
+    buffers: Mapping[str, BufferSpec]
+    out: tuple[str, ...]
+    n_kv_parts: int = 1
+    torus_hops: bool = False
+    expected_kv: Callable[[int, int], frozenset] | None = None
+
+    def expected_coverage(self, P: int, rank: int) -> frozenset:
+        if self.expected_kv is not None:
+            return self.expected_kv(P, rank)
+        return frozenset(
+            (home, part) for home in range(P) for part in range(self.n_kv_parts)
+        )
+
+
+def step_messages(step: Step, P: int):
+    """All point-to-point messages of one SPMD step on a ring of ``P`` ranks.
+
+    Yields ``(op, src, dst)`` for every Send op and source rank: the payload
+    read on ``src`` lands in ``op.targets`` on ``dst = (src + shift) % P``.
+    """
+    for op in step.sends:
+        for src in range(P):
+            yield op, src, (src + op.shift) % P
 
 
 def _default_shift(tree, axis_name, shift):

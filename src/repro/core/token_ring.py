@@ -54,11 +54,14 @@ from jax import lax
 
 from functools import partial
 
+from repro.analysis.preconditions import check_even_split, require
 from repro.core.merge import empty_partial, finalize
 from repro.core.schedule import (
+    BufferSpec,
     Compute,
     Merge,
     Schedule,
+    ScheduleSpec,
     Send,
     Step,
     execute_schedule,
@@ -69,7 +72,9 @@ from repro.kernels.ops import flash_attention
 __all__ = [
     "token_ring_sp",
     "token_ring_bidir_schedule",
+    "token_ring_bidir_spec",
     "token_ring_faithful_schedule",
+    "token_ring_faithful_spec",
     "token_ring_comm_cost",
     "token_ring_faithful_comm_cost",
 ]
@@ -103,6 +108,27 @@ def token_ring_faithful_schedule(P: int) -> Schedule:
     return Schedule(prologue=(*steps, drain))
 
 
+def token_ring_faithful_spec(P: int, **_) -> ScheduleSpec:
+    """Analyzer model of the faithful schedule (``analysis.schedule_check``).
+
+    The traveling partial ``p`` is priced at fp32 + lse with torus hop
+    distances — the convention of ``token_ring_faithful_comm_cost``; the
+    implementation actually sends the partial at ``q.dtype``, i.e. the model
+    is deliberately conservative at reduced precision (see docs/analysis.md).
+    """
+    return ScheduleSpec(
+        schedule=token_ring_faithful_schedule(P),
+        buffers={
+            "q": BufferSpec(role="q", positions=True),
+            "kv": BufferSpec(role="kv", heads="kv", positions=True),
+            "acc": BufferSpec(role="acc", lse=True, bound_q="q"),
+            "p": BufferSpec(role="acc", elem="f32", lse=True, virtual=True),
+        },
+        out=("acc",),
+        torus_hops=True,
+    )
+
+
 def token_ring_bidir_schedule(P: int) -> Schedule:
     """Split-Q bidirectional co-rotation with the accumulator lagging its
     query by one rank (see module docstring).
@@ -133,6 +159,26 @@ def token_ring_bidir_schedule(P: int) -> Schedule:
     )
 
 
+def token_ring_bidir_spec(P: int, **_) -> ScheduleSpec:
+    """Analyzer model of the bidir schedule: two half-Q streams, each with a
+    lagging ``(out, lse)`` accumulator riding the same direction."""
+    return ScheduleSpec(
+        schedule=token_ring_bidir_schedule(P),
+        buffers={
+            "qa": BufferSpec(role="q", part=0, frac=0.5, positions=True),
+            "qb": BufferSpec(role="q", part=1, frac=0.5, positions=True),
+            "kv": BufferSpec(role="kv", heads="kv", positions=True),
+            "aa": BufferSpec(
+                role="acc", frac=0.5, elem="travel", lse=True, bound_q="qa"
+            ),
+            "ab": BufferSpec(
+                role="acc", frac=0.5, elem="travel", lse=True, bound_q="qb"
+            ),
+        },
+        out=("aa", "ab"),
+    )
+
+
 def _token_ring_faithful(q, k, v, q_pos, k_pos, *, axis_name, flash,
                          overlap=True):
     """Algorithm 1: Q rotates +1; partials fly straight home (distance -i)."""
@@ -160,12 +206,10 @@ def _token_ring_bidir(q, k, v, q_pos, k_pos, *, axis_name, flash,
     """
     P = int(lax.psum(1, axis_name))
     S = q.shape[1]
-    if S % 2:
-        raise ValueError(
-            f"token_ring variant='bidir' splits the local Q block across the "
-            f"two ring directions and needs an even local length; got "
-            f"S_loc={S} — pad the sequence or use variant='faithful'"
-        )
+    require(check_even_split(
+        S, what="Q block", who="token_ring variant='bidir'",
+        alternative="variant='faithful'",
+    ))
     half = S // 2
 
     qa, qb = q[:, :half], q[:, half:]
@@ -271,6 +315,7 @@ register_strategy(
     "tokenring",
     partial(token_ring_sp, variant="bidir"),
     comm_cost=token_ring_comm_cost,
+    schedule_spec=token_ring_bidir_spec,
     kv_resident=True,
     extra_kwargs={"travel_dtype"},
     description="paper's method, TPU-adapted: split-Q bidirectional co-rotation",
@@ -280,6 +325,7 @@ register_strategy(
     "tokenring_faithful",
     partial(token_ring_sp, variant="faithful"),
     comm_cost=token_ring_faithful_comm_cost,
+    schedule_spec=token_ring_faithful_spec,
     kv_resident=True,
     description="paper's Algorithm 1 literal schedule (far homeward sends)",
 )

@@ -16,8 +16,6 @@ congestion-prone collective.
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 from jax import lax
 
 from repro.core.strategies import CommCost, register_strategy

@@ -16,11 +16,24 @@ Communication per device: ``halo * 2*S_loc*Hkv*D*b`` — independent of P.
 from __future__ import annotations
 
 from repro.core.collectives import flat_size
-from repro.core.schedule import Compute, Schedule, Send, Step, execute_schedule
+from repro.core.schedule import (
+    BufferSpec,
+    Compute,
+    Schedule,
+    ScheduleSpec,
+    Send,
+    Step,
+    execute_schedule,
+)
 from repro.core.strategies import CommCost, ceil_div, register_strategy
 from repro.kernels.ops import flash_attention
 
-__all__ = ["window_attention_sp", "window_halo_schedule", "window_comm_cost"]
+__all__ = [
+    "window_attention_sp",
+    "window_halo_schedule",
+    "window_spec",
+    "window_comm_cost",
+]
 
 
 def window_halo_schedule(halo: int) -> Schedule:
@@ -34,6 +47,28 @@ def window_halo_schedule(halo: int) -> Schedule:
     kv_order = tuple(f"kv{j}" for j in range(halo, -1, -1))
     steps.append(Step(Compute("q", kv_order, "p")))
     return Schedule(prologue=tuple(steps))
+
+
+def window_spec(P: int, *, S_loc: int, window: int | None = None, **_):
+    """Analyzer model of the halo exchange: each rank ends up attending its
+    own shard plus exactly its ``halo`` predecessors (never the full ring)."""
+    halo = 0 if not window else min(P - 1, ceil_div(window - 1, S_loc))
+    buffers = {
+        "q": BufferSpec(role="q", positions=True),
+        "kv0": BufferSpec(role="kv", heads="kv", positions=True),
+    }
+    for j in range(1, halo + 1):
+        buffers[f"kv{j}"] = BufferSpec(
+            role="kv", heads="kv", positions=True, virtual=True
+        )
+    return ScheduleSpec(
+        schedule=window_halo_schedule(halo),
+        buffers=buffers,
+        out=("p",),
+        expected_kv=lambda P_, r: frozenset(
+            ((r - j) % P_, 0) for j in range(halo + 1)
+        ),
+    )
 
 
 def window_attention_sp(
@@ -93,6 +128,7 @@ register_strategy(
     "window",
     window_attention_sp,
     comm_cost=window_comm_cost,
+    schedule_spec=window_spec,
     supports_window=True,
     requires_window=True,
     requires_layout="contig",  # halo semantics assume contiguous shards

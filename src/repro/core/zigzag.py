@@ -25,6 +25,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro.analysis.preconditions import check_zigzag_divisible, require
+
 __all__ = [
     "zigzag_chunk_ids",
     "zigzag_device_order",
@@ -69,12 +71,7 @@ def to_zigzag(x, P: int, axis: int = 1):
     each device its ``(j, 2P-1-j)`` chunk pair.
     """
     S = x.shape[axis]
-    if S % (2 * P):
-        raise ValueError(
-            f"zigzag layout needs the sequence length divisible by 2P "
-            f"(2 chunks per rank); got S={S}, P={P} — pad the sequence to a "
-            f"multiple of {2 * P} or use layout='contig'"
-        )
+    require(check_zigzag_divisible(S, P))
     order = zigzag_device_order(P)
     xs = jnp.split(x, 2 * P, axis=axis)
     return jnp.concatenate([xs[int(c)] for c in order], axis=axis)
@@ -83,11 +80,7 @@ def to_zigzag(x, P: int, axis: int = 1):
 def from_zigzag(x, P: int, axis: int = 1):
     """Inverse of :func:`to_zigzag`."""
     S = x.shape[axis]
-    if S % (2 * P):
-        raise ValueError(
-            f"zigzag layout needs the sequence length divisible by 2P; "
-            f"got S={S}, P={P}"
-        )
+    require(check_zigzag_divisible(S, P))
     order = zigzag_device_order(P)
     inv = np.empty_like(order)
     inv[order] = np.arange(2 * P)
@@ -100,11 +93,7 @@ def zigzag_positions(S: int, P: int, j):
 
     ``j`` may be a traced scalar (``lax.axis_index``); returns ``(S/P,)`` int32.
     """
-    if S % (2 * P):
-        raise ValueError(
-            f"zigzag layout needs the sequence length divisible by 2P; "
-            f"got S={S}, P={P}"
-        )
+    require(check_zigzag_divisible(S, P))
     C = S // (2 * P)
     base = jnp.arange(C, dtype=jnp.int32)
     early = j * C + base

@@ -63,7 +63,11 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPar
 __all__ = [
     "flash_attention_fwd_pallas",
     "flash_attention_bwd_pallas",
+    "kernel_buffer_shapes",
+    "tile_skip",
+    "tile_mask",
     "PAD_POS",
+    "MXU_LANE",
 ]
 
 NEG_INF = float(jnp.finfo(jnp.float32).min)
@@ -100,6 +104,51 @@ def _tile_mask(q_pos, k_pos, *, causal: bool, window: int | None):
     if window is not None:
         mask = jnp.logical_and(mask, q_pos[:, None] - k_pos[None, :] < window)
     return mask
+
+
+# Public names for the tile predicates: the static kernel lint
+# (``repro.analysis.kernel_lint``) evaluates the *same* functions on concrete
+# position tiles, so "the analyzer's skip math" and "the kernel's skip math"
+# cannot drift apart.
+tile_skip = _tile_skip
+tile_mask = _tile_mask
+
+
+def kernel_buffer_shapes(kind: str, *, block_q: int, block_k: int, D: int):
+    """Per-grid-step VMEM buffer shapes of one kernel, for footprint lints.
+
+    ``kind`` is ``"fwd"``, ``"bwd_dq"`` or ``"bwd_dkv"``.  Returns
+    ``{"in": [...], "out": [...], "scratch": [...]}`` where each entry is
+    ``(shape, elem)`` with ``elem`` one of ``"data"`` (the q/k/v dtype),
+    ``"f32"`` or ``"i32"``.  These mirror the BlockSpecs and scratch_shapes
+    of the three ``pallas_call``s below — update both together.
+    """
+    bq, bk = block_q, block_k
+    pos = [((1, bq), "i32"), ((1, bk), "i32")]
+    qkv = [((1, bq, 1, D), "data"), ((1, bk, 1, D), "data"),
+           ((1, bk, 1, D), "data")]
+    if kind == "fwd":
+        return {
+            "in": pos + qkv,
+            "out": [((1, bq, 1, D), "data"), ((1, bq, 1), "f32")],
+            "scratch": [((bq, D), "f32"), ((bq, MXU_LANE), "f32"),
+                        ((bq, MXU_LANE), "f32")],
+        }
+    rows = [((1, bq, 1), "f32")] * 3  # lse, delta, dlse
+    bwd_in = pos + qkv + [((1, bq, 1, D), "data")] + rows  # + dout
+    if kind == "bwd_dq":
+        return {
+            "in": bwd_in,
+            "out": [((1, bq, 1, D), "f32")],
+            "scratch": [((bq, D), "f32")],
+        }
+    if kind == "bwd_dkv":
+        return {
+            "in": bwd_in,
+            "out": [((1, bk, 1, D), "f32")] * 2,
+            "scratch": [((bk, D), "f32")] * 2,
+        }
+    raise ValueError(f"unknown kernel kind {kind!r}")
 
 
 def _fwd_kernel(

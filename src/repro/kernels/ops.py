@@ -76,21 +76,13 @@ def _pick_block(s: int, target: int) -> int:
 
     Raises when a sequence that *needs* tiling (``s > target``) only admits
     sub-sublane tiles (< 8 rows, e.g. ``s = 2 * odd``): silently degrading to
-    near-per-row grid steps is a perf cliff, not a fallback — pad the
-    sequence to a multiple of 8 (PAD_POS sentinel rows are masked out for
-    free) or pass a block size that divides it instead.
+    near-per-row grid steps is a perf cliff, not a fallback.  The selection
+    and the error message live in ``analysis.preconditions`` so the static
+    linter (PRE-TILE-DIV) and this runtime check can never drift apart.
     """
-    b = min(target, s)
-    while s % b:
-        b //= 2
-    if s > target and b < min(8, target):
-        raise ValueError(
-            f"sequence length {s} has no power-of-two tile in "
-            f"[{min(8, target)}, {target}] (best divisor: {b}); pad it to a "
-            f"multiple of 8 (masked PAD_POS sentinel rows are free) or pass "
-            f"a block size that divides it"
-        )
-    return b
+    from repro.analysis.preconditions import pick_block
+
+    return pick_block(s, target)
 
 
 # ---------------------------------------------------------------------------

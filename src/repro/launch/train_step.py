@@ -2,10 +2,7 @@
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 

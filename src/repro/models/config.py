@@ -7,8 +7,9 @@ so smoke tests always exercise the same code path as the full config.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import dataclasses
-from dataclasses import dataclass, field
 
 
 @dataclass(frozen=True)

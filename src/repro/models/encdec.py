@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import ParallelContext
 from repro.models.attention import (
     attention,
     attention_decode,
@@ -28,8 +27,6 @@ from repro.models.attention import (
 from repro.models.layers import (
     apply_norm,
     lm_cross_entropy,
-    dense,
-    dense_init,
     embed_init,
     mlp,
     mlp_init,

@@ -20,8 +20,6 @@ why falcon-mamba runs the long_500k cell.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -122,7 +120,6 @@ def _selective_scan_local(x_c, dt, Bs, Cs, A, D, h_in, chunk):
     x_c (B,S,di), dt (B,S,di), Bs/Cs (B,S,N), A (di,N), h_in (B,di,N).
     Returns y (B,S,di), h_last (B,di,N)."""
     B, S, di = x_c.shape
-    N = Bs.shape[-1]
     chunk = max(1, min(chunk, S))
     while S % chunk:
         chunk //= 2
@@ -283,7 +280,7 @@ def mamba_layer_decode(p, x, ssm_state, conv_state, *, cfg):
 
 
 def init_mamba_lm(cfg, key):
-    from repro.models.layers import embed_init, norm_init as _ni
+    from repro.models.layers import embed_init
 
     k_emb, k_layers, k_head = jax.random.split(key, 3)
     params = {

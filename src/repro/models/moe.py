@@ -165,8 +165,6 @@ def _moe_ffn_a2a(p, x, cfg, pctx):
     # EP axes: all SP axes when E divides them; otherwise the model axis only
     # (e.g. llama4's 16 experts on the 32-way multi-pod ring: experts are
     # replicated across pods, tokens route within their pod).
-    import math as _math
-
     total_sp = pctx.sp_degree
     if E % total_sp == 0:
         ep_axes = pctx.sp_axes if len(pctx.sp_axes) > 1 else pctx.sp_axes[0]

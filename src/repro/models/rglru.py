@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import ParallelContext, sp_scan
+from repro.core.api import sp_scan
 from repro.models.attention import attention, attention_decode, attention_init
 from repro.models.layers import (
     apply_norm,

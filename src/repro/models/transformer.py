@@ -22,7 +22,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from repro.core.api import ParallelContext
 from repro.models.attention import (
     attention,
     attention_decode,
@@ -35,7 +34,6 @@ from repro.models.layers import (
     apply_norm,
     constrain,
     lm_cross_entropy,
-    dense,
     dense_init,
     embed_init,
     mlp,

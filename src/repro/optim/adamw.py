@@ -8,8 +8,6 @@ live wherever the parameter shards live).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 

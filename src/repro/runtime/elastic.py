@@ -18,7 +18,6 @@ from __future__ import annotations
 import numpy as np
 
 import jax
-from jax.sharding import Mesh, NamedSharding
 
 from repro.core.compat import device_mesh
 

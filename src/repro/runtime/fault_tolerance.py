@@ -13,8 +13,6 @@ preemption notice instead.
 
 from __future__ import annotations
 
-import jax
-
 __all__ = ["FailureInjector", "FaultTolerantRunner", "SimulatedFailure"]
 
 

@@ -16,7 +16,6 @@ parallelism — because E is the stack-exempt *first* real dim for those.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [

@@ -17,13 +17,13 @@ import tempfile  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core.compat import shard_map  # noqa: E402
 
 
 def check_compressed_psum():
-    from repro.optim.compress import compressed_psum_ef, init_error_feedback
+    from repro.optim.compress import compressed_psum_ef
 
     mesh = jax.make_mesh((8,), ("data",))
     rng = np.random.default_rng(0)

@@ -25,7 +25,7 @@ import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core import ParallelContext, sp_attention, sp_decode, sp_scan  # noqa: E402
-from repro.core.zigzag import to_zigzag, from_zigzag  # noqa: E402
+from repro.core.zigzag import to_zigzag  # noqa: E402
 from repro.kernels.flash_attention import PAD_POS  # noqa: E402
 from repro.kernels.ref import attention_reference  # noqa: E402
 
@@ -599,6 +599,105 @@ def check_overlap():
         )
 
 
+def check_analyze():
+    """The static analyzer's three contracts, cross-validated on this host:
+
+    1. the full ``repro.launch.analyze`` pass is clean over every registered
+       strategy and the shape grid (the CI gate's exact code path);
+    2. the symbolic byte audit (positions included) equals the per-direction
+       bytes ``analyze_hlo`` measures on real compiled HLO — *exactly*, for
+       every spec'd strategy at P=4 and P=8;
+    3. the jaxpr-level overlap pre-check agrees with the compiled-HLO
+       ``overlap_report`` verdict for pipelined vs sequential execution.
+    """
+    from repro.analysis.comm_audit import AuditDims, audit_schedule
+    from repro.analysis.overlap_jaxpr import jaxpr_overlap_report, trace_strategy
+    from repro.core.strategies import get_strategy
+    from repro.launch.analyze import run_analysis
+    from repro.launch.hlo_analysis import analyze_hlo, overlap_report
+
+    # (1) the CI gate itself
+    report = run_analysis()
+    assert report.ok, report.render()
+    print(
+        f"PASS analyze static gate "
+        f"({sum(report.checked.values())} sites, 0 findings)"
+    )
+
+    # (2) exact audit == HLO bytes
+    n_dev = len(jax.devices())
+    B, S, Hq, Hkv, D, W = 2, 256, 4, 4, 32, 96
+    q, k, v = _data(B=B, S=S, Hq=Hq, Hkv=Hkv, seed=71)
+    for P_sp in (4, n_dev):
+        mesh = jax.make_mesh((n_dev // P_sp, P_sp), ("data", "model"))
+        B_loc = B // (n_dev // P_sp)
+        for strategy in ("tokenring", "ring", "ring_bidir", "window"):
+            layout = "contig" if strategy == "window" else "zigzag"
+            window = W if strategy == "window" else None
+            pctx = ParallelContext(
+                mesh=mesh, sp_axes=("model",), strategy=strategy,
+                layout=layout, impl="xla", block_q=64, block_k=64,
+            )
+            qx, kx, vx = (_layout(x, P_sp, layout) for x in (q, k, v))
+            pos = _positions(S, P_sp, layout)
+            fn = jax.jit(
+                lambda q, k, v, p, pctx=pctx, window=window: sp_attention(
+                    q, k, v, p, p, pctx=pctx, causal=True, window=window
+                )
+            )
+            hlo = fn.lower(qx, kx, vx, pos).compile().as_text()
+            st = analyze_hlo(hlo, world=n_dev)
+            desc = get_strategy(strategy)
+            spec = desc.schedule_spec(P_sp, S_loc=S // P_sp, window=window)
+            dims = AuditDims(
+                B=B_loc, S_loc=S // P_sp, Hq=Hq, Hkv=Hkv, D=D,
+                bytes_per_elem=4, travel_bytes=4,
+            )
+            fwd, bwd, findings = audit_schedule(
+                spec, P_sp, dims, include_positions=True, subject=strategy
+            )
+            assert not findings, findings
+            assert (fwd, bwd) == (st.link_bytes_fwd, st.link_bytes_bwd), (
+                strategy, P_sp, (fwd, bwd),
+                (st.link_bytes_fwd, st.link_bytes_bwd),
+            )
+            print(
+                f"PASS analyze bytes {strategy} P={P_sp}: audit == HLO "
+                f"({fwd}, {bwd})"
+            )
+
+    # (3) jaxpr overlap pre-check == compiled-HLO verdict
+    mesh4 = jax.make_mesh((n_dev // 4, 4), ("data", "model"))
+    qz, kz, vz = (to_zigzag(x, 4, axis=1) for x in (q, k, v))
+    pos = _positions(S, 4, "zigzag")
+    for strategy in ("tokenring", "ring", "ring_bidir"):
+        desc = get_strategy(strategy)
+        for overlap in (True, False):
+            jrep = jaxpr_overlap_report(
+                trace_strategy(desc, P=4, overlap=overlap)
+            )["scan_body_total"]
+            pctx = ParallelContext(
+                mesh=mesh4, sp_axes=("model",), strategy=strategy,
+                impl="xla", block_q=64, block_k=64, overlap=overlap,
+            )
+            fn = jax.jit(
+                lambda q, k, v, p, pctx=pctx: sp_attention(
+                    q, k, v, p, p, pctx=pctx, causal=True
+                )
+            )
+            hrep = overlap_report(
+                fn.lower(qz, kz, vz, pos).compile().as_text()
+            )["scan_body_total"]
+            assert (jrep["blocked"] == 0) == (hrep["compute_blocked"] == 0), (
+                strategy, overlap, jrep, hrep,
+            )
+            if not overlap:  # sequential mode blocks every body permute
+                assert jrep["blocked"] == jrep["permutes"] > 0, (
+                    strategy, jrep,
+                )
+        print(f"PASS analyze overlap pre-check agrees with HLO ({strategy})")
+
+
 def check_registry_plugin():
     """A strategy registered from *outside* core runs through sp_attention
     with no edits to the API — the registry's extensibility contract."""
@@ -664,6 +763,7 @@ CHECKS = {
     "overlap": check_overlap,
     "window": check_window,
     "registry": check_registry_plugin,
+    "analyze": check_analyze,
     "gradients": check_gradients,
     "hybrid": check_hybrid,
     "decode": check_decode,

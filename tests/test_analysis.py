@@ -1,0 +1,383 @@
+"""Mutation tests for the static analyzers: every corrupted schedule, kernel
+config, or precondition must be caught with the *right* rule ID, and every
+registered strategy must come back clean.
+
+The schedule mutations reuse the real builders (``token_ring_bidir_spec``
+etc.) and corrupt one structural fact at a time — drop a Send, flip a shift
+direction, merge twice, shrink a buffer — mirroring the bug classes the
+checker exists to catch before a 512-device run does.
+"""
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.analysis.comm_audit import AuditDims, audit_schedule, audit_strategy
+from repro.analysis.kernel_lint import (
+    VMEM_BUDGET_BYTES,
+    grid_findings,
+    lint_flash_config,
+    tile_skip_findings,
+    vmem_estimate,
+    vmem_findings,
+)
+from repro.analysis.preconditions import (
+    check_even_split,
+    check_tile_divisible,
+    check_zigzag_divisible,
+    require,
+)
+from repro.analysis.report import RULES, Finding, Report
+from repro.analysis.schedule_check import check_schedule_spec
+from repro.core.ring_attention import ring_bidir_spec, ring_spec
+from repro.core.schedule import (
+    Compute,
+    Merge,
+    Schedule,
+    Send,
+    Step,
+)
+from repro.core.strategies import available_strategies, get_strategy
+from repro.core.token_ring import token_ring_bidir_spec, token_ring_faithful_spec
+from repro.core.window import window_spec
+from repro.core.zigzag import zigzag_positions
+from repro.kernels.ops import FlashConfig
+
+P = 4
+DIMS = AuditDims(B=2, S_loc=64, Hq=8, Hkv=2, D=64)
+
+
+def rules_of(spec, p=P):
+    return {f.rule for f in check_schedule_spec(spec, p)}
+
+
+# ---------------------------------------------------------------------------
+# clean baselines: every registered spec'd strategy, several ring sizes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(available_strategies()))
+@pytest.mark.parametrize("p", [2, 3, 4, 8])
+def test_registered_strategies_clean(name, p):
+    desc = get_strategy(name)
+    if desc.schedule_spec is None:
+        pytest.skip("no schedule_spec declared")
+    spec = desc.schedule_spec(p, S_loc=64, window=96)
+    assert check_schedule_spec(spec, p, subject=name) == []
+    findings = audit_strategy(
+        desc, B=2, S=64 * p, Hq=8, Hkv=2, D=64, P=p,
+        bytes_per_elem=2, travel_dtype="bfloat16", window=96,
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# schedule mutations — each caught with its distinct rule ID
+# ---------------------------------------------------------------------------
+
+
+def test_zero_shift_is_deadlock():
+    s = ring_spec(P)
+    step = Step(Send(("kv",), 0), Compute("q", ("kv",), "p"), Merge("acc", "p"))
+    mut = replace(s, schedule=Schedule(
+        prologue=(step,), body=step, trips=P - 2,
+        epilogue=s.schedule.epilogue, static=s.schedule.static,
+    ))
+    assert rules_of(mut) == {"SCHED-DEADLOCK"}
+
+
+def test_colliding_sends_unmatched():
+    s = ring_spec(P)
+    step = Step(
+        Send(("kv",), 1), Send(("kv",), 2, into=("kv",)),
+        Compute("q", ("kv",), "p"), Merge("acc", "p"),
+    )
+    mut = replace(s, schedule=Schedule(
+        prologue=(step,), body=step, trips=P - 2,
+        epilogue=s.schedule.epilogue, static=s.schedule.static,
+    ))
+    assert "SCHED-UNMATCHED" in rules_of(mut)
+
+
+def test_flipped_shift_merge_mismatch():
+    # send the 'ab' accumulator the wrong way: it desynchronizes from its
+    # co-rotating query half and the merge folds someone else's partial.
+    s = token_ring_bidir_spec(P)
+    computes = (
+        Compute("qa", ("kv",), "pa"), Compute("qb", ("kv",), "pb"),
+        Merge("aa", "pa"), Merge("ab", "pb"),
+    )
+    body = Step(
+        Send(("qa",), 1), Send(("aa",), 1),
+        Send(("qb",), -1), Send(("ab",), 1),  # flipped: +1, should be -1
+        *computes,
+    )
+    mut = replace(s, schedule=replace(s.schedule, body=body))
+    found = rules_of(mut)
+    assert "SCHED-MERGE-MISMATCH" in found
+
+
+def test_double_merge_dup_cover():
+    s = ring_spec(P)
+    body = Step(
+        Send(("kv",), 1), Compute("q", ("kv",), "p"),
+        Merge("acc", "p"), Merge("acc", "p"),
+    )
+    mut = replace(s, schedule=Schedule(
+        prologue=(s.schedule.prologue[0],), body=body, trips=P - 2,
+        epilogue=s.schedule.epilogue, static=s.schedule.static,
+    ))
+    assert "SCHED-DUP-COVER" in rules_of(mut)
+
+
+def test_shrunk_buffer_shape():
+    s = token_ring_bidir_spec(P)
+    mut = replace(
+        s, buffers={**s.buffers, "aa": replace(s.buffers["aa"], frac=0.25)}
+    )
+    assert "SCHED-SHAPE" in rules_of(mut)
+
+
+def test_dropped_send_coverage_and_drift():
+    # ring_bidir forgets to rotate kvb: half the KV homes are never attended
+    # (and the same halves are re-attended), and the wire bytes drift.
+    s = ring_bidir_spec(P)
+    body = Step(
+        Send(("kva",), 1), Compute("q", ("kva", "kvb"), "p"), Merge("acc", "p")
+    )
+    mut = replace(s, schedule=replace(
+        s.schedule, prologue=(body,), body=body,
+    ))
+    assert "SCHED-COVERAGE" in rules_of(mut)
+    fwd, bwd, _ = audit_schedule(mut, P, DIMS)
+    f0, b0, _ = audit_schedule(s, P, DIMS)
+    assert (fwd, bwd) != (f0, b0)
+
+
+def test_short_trip_count_coverage():
+    s = ring_spec(P)
+    mut = replace(s, schedule=replace(s.schedule, trips=P - 3))
+    assert "SCHED-COVERAGE" in rules_of(mut)
+
+
+def test_validate_errors_reported_not_raised():
+    # an unknown buffer read is a SCHED-VALIDATE finding, not an exception
+    s = ring_spec(P)
+    step = Step(
+        Send(("kv",), 1), Compute("q", ("mystery",), "p"), Merge("acc", "p")
+    )
+    mut = replace(s, schedule=Schedule(
+        prologue=(step,), body=step, trips=P - 2,
+        epilogue=s.schedule.epilogue, static=s.schedule.static,
+    ))
+    assert "SCHED-VALIDATE" in rules_of(mut)
+
+
+def test_faithful_and_window_walks_cover_small_rings():
+    # unrolled/halo schedules change shape with P; walk the edge sizes too
+    for p in (2, 3, 5):
+        assert check_schedule_spec(token_ring_faithful_spec(p), p) == []
+    for p, w in ((2, 40), (4, 96), (8, 500)):
+        spec = window_spec(p, S_loc=64, window=w)
+        assert check_schedule_spec(spec, p) == []
+
+
+# ---------------------------------------------------------------------------
+# comm audit
+# ---------------------------------------------------------------------------
+
+
+def test_unspeced_buffer_is_flagged():
+    s = ring_spec(P)
+    buffers = dict(s.buffers)
+    del buffers["kv"]
+    fwd, bwd, findings = audit_schedule(replace(s, buffers=buffers), P, DIMS)
+    assert {f.rule for f in findings} == {"COMM-UNSPECED"}
+
+
+def test_audit_direction_tie_uses_declared_sign():
+    # P=2: +1 and -1 are equidistant; the declared sign keeps the two
+    # bidirectional half-streams on opposite wire directions.
+    s = ring_bidir_spec(2)
+    fwd, bwd, findings = audit_schedule(s, 2, DIMS)
+    assert findings == [] and fwd == bwd > 0
+
+
+def test_comm_drift_on_trip_change():
+    desc = get_strategy("ring")
+    mut_spec = ring_spec(P)
+    mut_spec = replace(
+        mut_spec, schedule=replace(mut_spec.schedule, trips=P - 3)
+    )
+    mut_desc = replace(desc, schedule_spec=lambda p, **_: mut_spec)
+    findings = audit_strategy(
+        mut_desc, B=2, S=64 * P, Hq=8, Hkv=2, D=64, P=P, bytes_per_elem=2
+    )
+    assert "COMM-DRIFT" in {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# kernel lints
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_estimate_monotone_and_budget():
+    small = vmem_estimate("fwd", block_q=128, block_k=128, D=64, data_bytes=2)
+    big = vmem_estimate("fwd", block_q=4096, block_k=4096, D=128, data_bytes=4)
+    assert 0 < small < big
+    cfg = FlashConfig(causal=True, block_q=4096, block_k=4096)
+    findings = vmem_findings(cfg, D=128, data_bytes=4, subject="huge")
+    assert findings and {f.rule for f in findings} == {"KERN-VMEM"}
+    assert big > VMEM_BUDGET_BYTES
+    ok = vmem_findings(
+        FlashConfig(block_q=512, block_k=512), D=64, data_bytes=2, subject="s"
+    )
+    assert ok == []
+
+
+def test_grid_cover():
+    assert grid_findings(1024, 1024, block_q=64, block_k=64, subject="g") == []
+    bad = grid_findings(96, 1024, block_q=64, block_k=64, subject="g")
+    assert [f.rule for f in bad] == ["KERN-GRID-COVER"]
+
+
+def test_tile_skip_sound_on_zigzag_and_corrupt_predicate_caught():
+    S, p = 256, 4
+    pos = np.stack([np.asarray(zigzag_positions(S, p, j)) for j in range(p)])
+    qp = pos[:1]
+    assert tile_skip_findings(
+        qp, qp, block_q=32, block_k=32, causal=True, window=None, subject="zz"
+    ) == []
+
+    def eager_skip(q_pos, k_pos, *, causal, window):
+        return True  # "skip everything" — drops live attention mass
+
+    bad = tile_skip_findings(
+        qp, qp, block_q=32, block_k=32, causal=True, window=None,
+        subject="zz", skip_fn=eager_skip,
+    )
+    assert bad and {f.rule for f in bad} == {"KERN-LIVE-SKIP"}
+
+
+def test_lint_flash_config_composes():
+    cfg = FlashConfig(causal=True, block_q=64, block_k=64)
+    assert lint_flash_config(
+        cfg, Sq=256, Sk=256, D=64, data_bytes=2, subject="c"
+    ) == []
+    # s = 2 * odd admits no >=8-row power-of-two tile: PRE-TILE-DIV
+    bad = lint_flash_config(
+        FlashConfig(block_q=512, block_k=512), Sq=1038, Sk=1024, D=64,
+        data_bytes=2, subject="c",
+    )
+    assert "PRE-TILE-DIV" in {f.rule for f in bad}
+
+
+# ---------------------------------------------------------------------------
+# shared precondition catalog: same words statically and at runtime
+# ---------------------------------------------------------------------------
+
+
+def test_catalog_messages_are_the_runtime_errors():
+    msg = check_even_split(
+        65, what="Q block", who="token_ring variant='bidir'",
+        alternative="variant='faithful'",
+    )
+    assert "token_ring variant='bidir' splits the local Q block" in msg
+    with pytest.raises(ValueError, match="needs an even local length"):
+        require(msg)
+    assert check_even_split(64, what="x", who="y", alternative="z") is None
+
+    msg = check_zigzag_divisible(100, 4)
+    assert "divisible by 2P" in msg and "multiple of 8" in msg
+    assert check_zigzag_divisible(96, 4) is None
+
+    assert check_tile_divisible(1024, 512) is None
+    assert "no power-of-two tile" in check_tile_divisible(1038, 512)
+
+
+def test_runtime_raises_route_through_catalog():
+    import jax.numpy as jnp
+
+    from repro.core.zigzag import to_zigzag
+    from repro.kernels.ops import flash_attention
+
+    with pytest.raises(ValueError, match="divisible by 2P"):
+        to_zigzag(jnp.zeros((1, 100, 1, 4)), 4)
+    with pytest.raises(ValueError, match="no power-of-two tile"):
+        flash_attention(
+            jnp.zeros((1, 1038, 1, 4)), jnp.zeros((1, 1038, 1, 4)),
+            jnp.zeros((1, 1038, 1, 4)), impl="xla",
+        )
+
+
+# ---------------------------------------------------------------------------
+# report plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_finding_requires_known_rule():
+    with pytest.raises(ValueError, match="unknown rule"):
+        Finding("NOT-A-RULE", "s", "d")
+
+
+def test_report_render_and_ok():
+    r = Report()
+    r.note_checked("schedule", 3)
+    assert r.ok and "OK: 0 findings" in r.render()
+    r.extend([Finding("SCHED-DEADLOCK", "subj", "det")])
+    assert not r.ok and "FAIL: 1 finding(s)" in r.render()
+    assert set(r.by_rule()) == {"SCHED-DEADLOCK"}
+    assert sorted(RULES) == sorted(set(RULES))  # IDs unique by construction
+
+
+# ---------------------------------------------------------------------------
+# jaxpr overlap pre-check (device-free)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["tokenring", "ring", "ring_bidir"])
+def test_jaxpr_overlap_verdicts(name):
+    from repro.analysis.overlap_jaxpr import (
+        jaxpr_overlap_report,
+        overlap_findings,
+        trace_strategy,
+    )
+
+    desc = get_strategy(name)
+    piped = jaxpr_overlap_report(trace_strategy(desc, P=4, overlap=True))
+    seq = jaxpr_overlap_report(trace_strategy(desc, P=4, overlap=False))
+    body_p, body_s = piped["scan_body_total"], seq["scan_body_total"]
+    assert body_p["permutes"] > 0 and body_p["blocked"] == 0
+    assert body_s["blocked"] == body_s["permutes"] > 0
+    assert overlap_findings(desc, P=4) == []
+
+
+def test_overlap_findings_flag_blocked_pipeline():
+    from repro.analysis.overlap_jaxpr import overlap_findings
+
+    desc = get_strategy("ring")
+    # lie about the fn: trace the sequential mode under a pipelines=True claim
+    broken = replace(
+        desc,
+        fn=lambda *a, overlap=True, **kw: desc.fn(*a, overlap=False, **kw),
+    )
+    findings = overlap_findings(broken, P=4)
+    assert [f.rule for f in findings] == ["OVLP-BLOCKED"]
+
+
+# ---------------------------------------------------------------------------
+# the CLI gate
+# ---------------------------------------------------------------------------
+
+
+def test_analyze_cli_clean_and_fails_on_findings(capsys):
+    from repro.launch.analyze import main, run_analysis
+
+    assert main(["--all", "--passes", "schedule,comm",
+                 "--fail-on-findings"]) == 0
+    out = capsys.readouterr().out
+    assert "OK: 0 findings" in out
+
+    report = run_analysis(passes=("schedule",))
+    assert report.ok and report.checked["schedule"] > 0

@@ -136,3 +136,96 @@ def test_moe_capacity_monotone():
     # up to fp noise; at cf>=1+eps everything fits and it saturates)
     assert outs[0] <= outs[1] + 1e-4
     np.testing.assert_allclose(outs[1], outs[2], rtol=0.2)
+
+
+def _rotation_spec(p: int, shift: int):
+    """Ring-template schedule rotating KV by ``shift`` each step: a valid
+    strategy iff the rotation generates the whole ring (gcd(shift, p) == 1)."""
+    from repro.core.schedule import (
+        BufferSpec,
+        Compute,
+        Merge,
+        Schedule,
+        ScheduleSpec,
+        Send,
+        Step,
+    )
+
+    final = Step(Compute("q", ("kv",), "p"), Merge("acc", "p"))
+    step = Step(
+        Send(("kv",), shift), Compute("q", ("kv",), "p"), Merge("acc", "p")
+    )
+    return ScheduleSpec(
+        schedule=Schedule(
+            prologue=(step,), body=step, trips=p - 2, epilogue=(final,),
+            static=frozenset({"q"}),
+        ),
+        buffers={
+            "q": BufferSpec(role="q", positions=True),
+            "kv": BufferSpec(role="kv", heads="kv", positions=True),
+            "acc": BufferSpec(role="acc", lse=True, bound_q="q"),
+        },
+        out=("acc",),
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(p=st.integers(2, 12), shift=st.integers(-12, 12))
+def test_rotation_schedule_clean_iff_generator(p, shift):
+    """The rank-symbolic walk accepts exactly the rotations that tile the
+    ring: gcd(shift, P) == 1.  Zero shifts deadlock; non-generators leave
+    coverage holes — for every (P, shift) pair, not just the shipped ones."""
+    import math
+
+    from repro.analysis.schedule_check import check_schedule_spec
+
+    rules = {f.rule for f in check_schedule_spec(_rotation_spec(p, shift), p)}
+    if shift % p == 0:
+        assert "SCHED-DEADLOCK" in rules
+    elif math.gcd(shift, p) == 1:
+        assert rules == set()
+    else:
+        assert "SCHED-COVERAGE" in rules
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=st.integers(3, 10), trips=st.integers(0, 12))
+def test_ring_trip_count_clean_iff_exact(p, trips):
+    """Every wrong scan trip count is caught (under- and over-rotation)."""
+    from dataclasses import replace
+
+    from repro.analysis.schedule_check import check_schedule_spec
+    from repro.core.ring_attention import ring_spec
+
+    spec = ring_spec(p)
+    mut = replace(spec, schedule=replace(spec.schedule, trips=trips))
+    findings = check_schedule_spec(mut, p)
+    if trips == p - 2:
+        assert findings == []
+    else:
+        assert {f.rule for f in findings} & {
+            "SCHED-COVERAGE", "SCHED-DUP-COVER"
+        }
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    p=st.sampled_from([2, 3, 4, 8]),
+    b=st.integers(1, 4),
+    s_loc=st.sampled_from([32, 64, 128]),
+    heads=st.sampled_from([(4, 4), (8, 2), (16, 16)]),
+    bpe=st.sampled_from([1, 2, 4]),
+)
+def test_audit_matches_cost_models_everywhere(p, b, s_loc, heads, bpe):
+    """Byte conservation is a property, not a grid point: the schedule walk
+    equals the closed forms at every shape hypothesis throws at it."""
+    from repro.analysis.comm_audit import audit_strategy
+    from repro.core.strategies import get_strategy
+
+    hq, hkv = heads
+    for name in ("tokenring", "tokenring_faithful", "ring", "ring_bidir"):
+        findings = audit_strategy(
+            get_strategy(name), B=b, S=s_loc * p, Hq=hq, Hkv=hkv, D=64, P=p,
+            bytes_per_elem=bpe, travel_dtype="float32",
+        )
+        assert findings == [], [str(f) for f in findings]
