@@ -35,7 +35,7 @@ strategy inside.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Callable
 
 import jax.numpy as jnp
@@ -43,9 +43,12 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map
 from repro.core.strategies import (
+    KV_RESIDENT_MARGIN,
     CommCost,
     SPStrategy,
+    _decision_travel_dtype,
     attention_compute_flops,
+    ceil_div,
     get_strategy,
     ineligible_reason,
     resolve_strategy,
@@ -56,12 +59,20 @@ __all__ = [
     "ParallelContext",
     "ExecutionPlan",
     "AttnShapes",
+    "PREFILL_CANDIDATES",
     "sp_attention",
     "sp_decode",
     "sp_prefill",
     "sp_scan",
     "choose_strategy",
 ]
+
+# The prefill arbitration pool (``ParallelContext.choose_prefill_strategy``):
+# the resident-psum chunk path plus the two prefill rings of
+# ``core/prefill_rings.py`` — opposite bets on what moves over the wire,
+# decided per request by the KV:Q byte ratio after prefix-cache hits are
+# subtracted from the query side.
+PREFILL_CANDIDATES = ("prefill", "passkv_ring", "passq_ring")
 
 
 @dataclass(frozen=True)
@@ -454,6 +465,72 @@ class ParallelContext:
             cost=self._serving_cost("decode", shapes, table_pages),
         )
 
+    def effective_prefill_shapes(
+        self, shapes: AttnShapes, *, prefix_hit_rate: float = 0.0
+    ) -> AttnShapes:
+        """Shapes the prefill arbitration actually prices: the query side
+        shrinks to the prefix-cache *miss suffix* (hit pages are already
+        resident — only the suffix needs query work), rounded up to an
+        SP-degree multiple so a ring schedule could run it; the KV side stays
+        the full context (resident prefix KV still participates in
+        attention)."""
+        if not 0.0 <= prefix_hit_rate <= 1.0:
+            raise ValueError(f"prefix_hit_rate {prefix_hit_rate} not in [0, 1]")
+        P_sp = self.sp_degree
+        miss = shapes.Sq - int(shapes.Sq * prefix_hit_rate)
+        Sq_eff = max(P_sp, ceil_div(miss, P_sp) * P_sp)
+        return replace(shapes, Sq=Sq_eff, Sk=shapes.seq_kv)
+
+    def choose_prefill_strategy(
+        self,
+        shapes: AttnShapes,
+        *,
+        prefix_hit_rate: float = 0.0,
+        table_pages: int | None = None,
+    ) -> str:
+        """Arbitrate the prefill schedule over :data:`PREFILL_CANDIDATES`
+        from the KV:Q byte ratio and the measured prefix-cache hit rate.
+
+        ``shapes.Sq`` is the request's query (prompt) length, ``shapes.Sk``
+        the full KV context it attends to.  The candidates' ``comm_cost``
+        models are evaluated at the miss-suffix query length
+        (:meth:`effective_prefill_shapes`): pass-KV scales with the *KV*
+        side (right for cold long-KV prefill, where every token's K/V must
+        visit every rank anyway), pass-Q and the resident psum scale with
+        the *query* side (right once prefix hits collapse it).  Argmin over
+        max-direction bytes (total on half-duplex fabrics) with the same
+        KV-residency margin the training planner applies — docs/serving.md
+        §7 works the crossover.
+        """
+        self._validate_axes()
+        eff = self.effective_prefill_shapes(
+            shapes, prefix_hit_rate=prefix_hit_rate
+        )
+        P_sp = self.sp_degree
+        B_loc = eff.B
+        if self.data_axis is not None:
+            B_loc = max(1, eff.B // self.mesh.shape[self.data_axis])
+        extras = {
+            "travel_dtype": _decision_travel_dtype(eff.dtype_bytes),
+            "table_pages": table_pages,
+        }
+        scored = []
+        for name in PREFILL_CANDIDATES:
+            desc = get_strategy(name)
+            cost = strategy_cost(
+                desc, B_loc, eff.Sq, eff.Hq, eff.Hkv, eff.D, P_sp,
+                bytes_per_elem=eff.dtype_bytes, bidir_links=self.bidir_links,
+                S_kv=eff.seq_kv, **extras,
+            )
+            score = cost.max_direction if self.bidir_links else cost.total
+            scored.append((score, desc))
+        scored.sort(key=lambda t: (t[0], t[1].name))
+        best_score = scored[0][0]
+        for score, desc in scored:
+            if desc.kv_resident and score <= KV_RESIDENT_MARGIN * best_score:
+                return desc.name
+        return scored[0][1].name
+
     def plan_prefill(
         self,
         *,
@@ -461,16 +538,48 @@ class ParallelContext:
         scale: float | None = None,
         shapes: AttnShapes | None = None,
         table_pages: int | None = None,
+        strategy: str | None = None,
+        prefix_hit_rate: float = 0.0,
     ) -> ExecutionPlan:
         """Chunked-prefill plan: a replicated prompt chunk against the
         resident sharded cache plus its own local block (cross-chunk
         causality via the Update() merge — see ``core/decode.py``).
 
-        Binds the registered ``"prefill"`` serving strategy; with ``shapes``
-        (``Sq`` = chunk length, ``Sk`` = cache capacity) the plan carries the
-        modeled per-chunk link bytes (plus the paged block-table term when
-        ``table_pages`` is given).
+        ``strategy=None`` (the default) binds the registered ``"prefill"``
+        serving strategy; with ``shapes`` (``Sq`` = chunk length, ``Sk`` =
+        cache capacity) the plan carries the modeled per-chunk link bytes
+        (plus the paged block-table term when ``table_pages`` is given).
+
+        ``strategy="auto"`` arbitrates per request over
+        :data:`PREFILL_CANDIDATES` via :meth:`choose_prefill_strategy`
+        (requires ``shapes``; ``prefix_hit_rate`` is the engine's measured
+        cross-request prefix-cache hit rate, ``serving/engine.py``).  A ring
+        winner returns an *attention-style* plan — q/k/v sequence-sharded
+        over the SP axes, causal — over the miss-suffix shapes; the psum
+        winner returns the resident-chunk plan below.  An explicit ring name
+        binds that ring unconditionally.
         """
+        if strategy is not None:
+            if strategy == "auto":
+                if shapes is None:
+                    raise ValueError(
+                        "plan_prefill(strategy='auto') needs shapes= to "
+                        "arbitrate the KV:Q byte ratio"
+                    )
+                strategy = self.choose_prefill_strategy(
+                    shapes, prefix_hit_rate=prefix_hit_rate,
+                    table_pages=table_pages,
+                )
+            elif strategy not in PREFILL_CANDIDATES:
+                raise ValueError(
+                    f"plan_prefill strategy {strategy!r} not one of "
+                    f"{PREFILL_CANDIDATES}"
+                )
+            if strategy != "prefill":
+                return self._plan_prefill_ring(
+                    strategy, shapes, window=window, scale=scale,
+                    prefix_hit_rate=prefix_hit_rate,
+                )
         desc = get_strategy("prefill")
         self._validate_axes()
         dp = self.data_axis
@@ -497,6 +606,64 @@ class ParallelContext:
             out_specs=qspec, local_fn=local_fn, sp_axes=self.sp_axes,
             sp_degree=self.sp_degree,
             cost=self._serving_cost("prefill", shapes, table_pages),
+        )
+
+    def _plan_prefill_ring(
+        self,
+        name: str,
+        shapes: AttnShapes | None,
+        *,
+        window: int | None,
+        scale: float | None,
+        prefix_hit_rate: float = 0.0,
+    ) -> ExecutionPlan:
+        """Bind a prefill *ring* (``passkv_ring`` / ``passq_ring``) as an
+        attention-style plan over the miss-suffix shapes: q/k/v enter
+        sequence-sharded over the SP axes (unlike the resident-chunk path's
+        replicated chunk), the ring circulates its chosen side, causal."""
+        self._validate_axes()
+        desc = get_strategy(name)
+        P_sp = self.sp_degree
+        axis_name = self.flat_axis_name
+        extras = self._strategy_kwargs(desc)
+        kw = dict(
+            causal=True, window=window, scale=scale, impl=self.impl,
+            block_q=self.block_q, block_k=self.block_k,
+            block_q_bwd=self.block_q_bwd, block_k_bwd=self.block_k_bwd,
+            overlap=self.overlap,
+        )
+        fn = desc.fn
+
+        def local_fn(q, k, v, qp, kp):
+            return fn(q, k, v, qp, kp, axis_name=axis_name, **kw, **extras)
+
+        dp = self.data_axis
+        seq = self.seq_spec()
+        qspec = P(dp, seq, None, None)
+        pspec = P(dp, seq)
+        cost = None
+        compute_flops = None
+        if shapes is not None:
+            eff = self.effective_prefill_shapes(
+                shapes, prefix_hit_rate=prefix_hit_rate
+            )
+            B_loc = eff.B
+            if dp is not None:
+                B_loc = max(1, eff.B // self.mesh.shape[dp])
+            cost = strategy_cost(
+                desc, B_loc, eff.Sq, eff.Hq, eff.Hkv, eff.D, P_sp,
+                bytes_per_elem=eff.dtype_bytes, bidir_links=self.bidir_links,
+                S_kv=eff.seq_kv, window=window, **extras,
+            )
+            compute_flops = attention_compute_flops(
+                B_loc, eff.Sq, eff.Hq, eff.D, P_sp, S_kv=eff.seq_kv,
+                causal=True,
+            )
+        return ExecutionPlan(
+            kind="prefill", strategy=name, inner=None, mesh=self.mesh,
+            in_specs=(qspec, qspec, qspec, pspec, pspec), out_specs=qspec,
+            local_fn=local_fn, sp_axes=self.sp_axes, sp_degree=P_sp,
+            cost=cost, compute_flops=compute_flops, pipelines=desc.pipelines,
         )
 
     def plan_scan(self, *, ndim: int, axis: int = 1) -> ExecutionPlan:

@@ -200,6 +200,7 @@ def _ensure_builtins() -> None:
         return
     _BUILTINS_LOADED = True
     import repro.core.decode  # noqa: F401  (serving: "decode" + "prefill")
+    import repro.core.prefill_rings  # noqa: F401  ("passkv_ring" + "passq_ring")
     import repro.core.ring_attention  # noqa: F401
     import repro.core.token_ring  # noqa: F401
     import repro.core.ulysses  # noqa: F401

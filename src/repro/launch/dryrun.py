@@ -247,6 +247,22 @@ def run_cell(arch, shape_name, *, multi_pod, strategy, out_dir, force=False,
                     "block_k_bwd": pctx.block_k_bwd or pctx.block_k,
                 },
             }
+            if kind == "prefill":
+                # Prefill-ring arbitration record: which schedule the
+                # planner picks for this cell cold (no prefix-cache hits)
+                # vs. warm (a shared system prompt mostly resident) — the
+                # crossover docs/serving.md §7 works analytically.
+                shp = AttnShapes(
+                    B=shape.global_batch, Sq=shape.seq_len, Hq=cfg.n_heads,
+                    Hkv=cfg.n_kv_heads, D=cfg.head_dim,
+                    dtype_bytes=jnp.dtype(cfg.dtype).itemsize,
+                )
+                plan_info["adaptive_prefill"] = {
+                    f"hit_rate_{r}": pctx.choose_prefill_strategy(
+                        shp, prefix_hit_rate=r
+                    )
+                    for r in (0.0, 0.5, 0.95)
+                }
         except ValueError as e:
             plan_info = {"error": str(e)}
     elif kind == "decode" and pctx.active and cfg.family in ("dense", "moe", "vlm"):

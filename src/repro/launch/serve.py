@@ -35,12 +35,17 @@ from repro.serving.engine import ServingEngine
 
 
 def print_serving_plan(cfg, *, max_batch: int, chunk: int, max_len: int,
-                       sp_degree: int = 4, page_size: int | None = None):
+                       sp_degree: int = 4, page_size: int | None = None,
+                       prefix_hit_rate: float | None = None):
     """Planner view of the serving schedules for this config: modeled
     per-step link bytes at an SP degree of ``sp_degree`` (the same
     ``comm_cost`` models ``plan_decode`` / ``plan_prefill`` attach to real
     multi-device plans).  With ``page_size`` the paged block-table term
-    rides along (``table_pages = ceil(max_len / page_size)``)."""
+    rides along (``table_pages = ceil(max_len / page_size)``).  With a
+    ``prefix_hit_rate`` (measured by the engine's prefix index) the adaptive
+    prefill arbitration is printed too: which of the prefill candidates —
+    resident psum chunks, pass-KV ring, pass-Q ring — the planner would bind
+    for a full-length prompt at that hit rate (docs/serving.md §7)."""
     from repro.serving.kv_cache import pages_for
 
     bpe = 2 if cfg.dtype == "bfloat16" else 4
@@ -62,6 +67,41 @@ def print_serving_plan(cfg, *, max_batch: int, chunk: int, max_len: int,
         f"(batch {max_batch}), prefill {pre.max_direction:.0f} B/chunk "
         f"(chunk {chunk}) — cache-resident, independent of context length"
         f"{paged}"
+    )
+    if prefix_hit_rate is not None:
+        print_adaptive_prefill(
+            cfg, max_len=max_len, sp_degree=sp_degree,
+            table_pages=table_pages, prefix_hit_rate=prefix_hit_rate,
+        )
+
+
+def print_adaptive_prefill(cfg, *, max_len: int, sp_degree: int = 4,
+                           table_pages: int | None = None,
+                           prefix_hit_rate: float = 0.0):
+    """The prefill-ring arbitration for a full-length prompt at the
+    engine's *measured* prefix-cache hit rate: which of ``prefill`` (the
+    resident psum chunk path), ``passkv_ring``, ``passq_ring`` the planner
+    would bind next (``ParallelContext.choose_prefill_strategy``; the byte
+    crossover is worked in docs/serving.md §7)."""
+    import jax as _jax
+
+    from repro.core.api import AttnShapes
+
+    pctx = ParallelContext(
+        mesh=_jax.sharding.AbstractMesh((("sp", sp_degree),)),
+        sp_axes=("sp",), data_axis=None,
+    )
+    shp = AttnShapes(
+        B=1, Sq=max_len, Hq=cfg.n_heads, Hkv=cfg.n_kv_heads,
+        D=cfg.head_dim, dtype_bytes=2 if cfg.dtype == "bfloat16" else 4,
+    )
+    cold = pctx.choose_prefill_strategy(shp, table_pages=table_pages)
+    warm = pctx.choose_prefill_strategy(
+        shp, prefix_hit_rate=prefix_hit_rate, table_pages=table_pages
+    )
+    print(
+        f"adaptive prefill @ SP={sp_degree}: cold -> {cold}, "
+        f"measured hit rate {prefix_hit_rate:.2f} -> {warm}"
     )
 
 
@@ -90,6 +130,15 @@ def main(argv=None):
                     default=True,
                     help="evict the newest request (recompute-style) when "
                     "the page pool runs dry instead of raising")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="content-addressed prefix reuse across requests "
+                    "(paged cache only): requests sharing a prompt prefix "
+                    "map the same physical pages and prefill skips straight "
+                    "to the miss suffix")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens to "
+                    "every request (exercises the prefix cache)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -110,13 +159,16 @@ def main(argv=None):
         temperature=args.temperature, seed=args.seed,
         prefill_chunk=args.prefill_chunk, token_budget=args.token_budget,
         page_size=args.page_size, max_pages=args.max_pages,
-        preempt=args.preempt,
+        preempt=args.preempt, prefix_cache=args.prefix_cache,
     )
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab_size, args.shared_prefix)
     t0 = time.perf_counter()
     for i in range(args.requests):
         plen = int(rng.integers(3, 9))
-        prompt = rng.integers(0, cfg.vocab_size, plen)
+        prompt = np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, plen)]
+        ).astype(np.int32)
         eng.submit(prompt, max_new_tokens=args.max_new)
     done = eng.run()
     dt = time.perf_counter() - t0
@@ -135,6 +187,22 @@ def main(argv=None):
         print(
             f"pages: {u['high_water']}/{u['pages_total']} high-water "
             f"(x{args.page_size} tokens), {s['preemptions']} preemptions"
+        )
+    if "prefix" in s:
+        p = s["prefix"]
+        print(
+            f"prefix cache: {p['hit_tokens']}/{p['lookup_tokens']} tokens hit "
+            f"({p['hit_rate']*100:.0f}%), {p['indexed_pages']} pages indexed, "
+            f"{p['cow_copies']} COW copies, {p['evictions']} evictions"
+        )
+        # Thread the *measured* hit rate back into the planner: the prefill
+        # schedule the arbitration would bind for the next such request.
+        from repro.serving.kv_cache import pages_for
+
+        print_adaptive_prefill(
+            cfg, max_len=args.max_len,
+            table_pages=pages_for(args.max_len, args.page_size),
+            prefix_hit_rate=p["hit_rate"],
         )
     for r in done[:3]:
         print(f"  req {r.uid}: prompt {r.prompt.tolist()} -> {r.output}")

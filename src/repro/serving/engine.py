@@ -55,7 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import PAD_POS
-from repro.serving.kv_cache import PageAllocator, pages_for
+from repro.serving.kv_cache import PageAllocator, PrefixIndex, pages_for
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -104,11 +104,16 @@ class ServingEngine:
                  temperature: float = 0.0, seed: int = 0,
                  prefill_chunk: int = 32, token_budget: int | None = None,
                  page_size: int | None = None, max_pages: int | None = None,
-                 preempt: bool = True):
+                 preempt: bool = True, prefix_cache: bool = False):
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         if token_budget is not None and token_budget < 1:
             raise ValueError(f"token_budget must be >= 1, got {token_budget}")
+        if prefix_cache and page_size is None:
+            raise ValueError(
+                "prefix_cache needs the paged KV cache (set page_size=): "
+                "cross-request page sharing has no dense-slab analog"
+            )
         self.bundle = bundle
         self.params = params
         self.max_batch = max_batch
@@ -141,6 +146,7 @@ class ServingEngine:
                 raise ValueError(f"max_pages must be >= 1, got {self.max_pages}")
             self.NULL = self.max_pages  # unmapped block-table sentinel
             self.alloc = PageAllocator(self.max_pages)
+            self.prefix = PrefixIndex(page_size) if prefix_cache else None
             self._bt = np.full((max_batch, self.slot_pages), self.NULL, np.int32)
             self._bt_dirty = False
             self.state = bundle.init_paged_state(
@@ -151,6 +157,7 @@ class ServingEngine:
             self._chunked = True
         else:
             self.page_size = None
+            self.prefix = None
             self.cap = max_len
             self.state = bundle.init_serve_state(max_batch, max_len)
             self._step = jax.jit(bundle.decode_step)
@@ -174,11 +181,15 @@ class ServingEngine:
         if self._paged:
             # Paged: only the length resets per slot — freed pages already
             # had their position rows restored to PAD_POS on release, and
-            # the block-table row is host-side.
-            self._reset_slot = jax.jit(
-                lambda state, i: dict(state, len=state["len"].at[i].set(0)),
+            # the block-table row is host-side.  With the prefix cache the
+            # length starts at the reused-prefix hit instead of 0: the hit
+            # pages' position rows are still valid (they never left the
+            # index), so prefill resumes straight at the miss suffix.
+            self._reset_slot_to = jax.jit(
+                lambda state, i, n: dict(state, len=state["len"].at[i].set(n)),
                 donate_argnums=0,
             )
+            self._reset_slot = lambda state, i: self._reset_slot_to(state, i, 0)
             self._release_pages = jax.jit(
                 lambda state, pages: dict(
                     state,
@@ -186,6 +197,23 @@ class ServingEngine:
                 ),
                 donate_argnums=0,
             )
+
+            def _cow_copy(state, src, dst, keep):
+                # Duplicate page ``src`` into private page ``dst``, keeping
+                # only the first ``keep`` position entries valid: the K/V
+                # rows beyond the divergence are masked (PAD_POS) until the
+                # sharer's own prefill overwrites them.  The shared source
+                # page is read, never written.
+                offs = jnp.arange(self.page_size, dtype=jnp.int32)
+                row = jnp.where(offs < keep, state["pos"][src], PAD_POS)
+                return dict(
+                    state,
+                    k=state["k"].at[:, dst].set(state["k"][:, src]),
+                    v=state["v"].at[:, dst].set(state["v"][:, src]),
+                    pos=state["pos"].at[dst].set(row),
+                )
+
+            self._cow_copy = jax.jit(_cow_copy, donate_argnums=0)
         else:
             def _dense_reset(state, i):
                 def fix(path, leaf):
@@ -270,25 +298,75 @@ class ServingEngine:
             if slot is not None or not self.queue:
                 continue
             req = self.queue[0]
+            hit_tokens = 0
             if self._paged:
                 need = pages_for(len(req._tokens) - 1, self.page_size)
-                if need > self.alloc.free_pages:
+                hit = None
+                n_hit = 0
+                if self.prefix is not None:
+                    # Reusable prefix among resident pages: only rows the
+                    # prefill would write (tokens[:-1]) can be reused.
+                    hit = self.prefix.lookup(req._tokens[:-1])
+                    n_hit = len(hit.pages)
+                fresh = self._alloc_pages(need - n_hit)
+                if fresh is None:
                     # Page exhaustion: strict FCFS — later requests wait
                     # behind the head rather than starving it.
                     break
-                req._pages = self.alloc.alloc(need)
+                if hit is not None:
+                    self.prefix.acquire(hit.pages)
+                    hit_tokens = hit.tokens
+                    if hit.cow_page is not None and hit.cow_keep > 0:
+                        # Divergence inside a resident page: duplicate it
+                        # into this request's first private page and keep
+                        # the shared rows — the resident page stays
+                        # untouched (copy-on-write).
+                        self.state = self._cow_copy(
+                            self.state, hit.cow_page, fresh[0], hit.cow_keep
+                        )
+                        self.prefix.cow_copies += 1
+                req._pages = list(hit.pages if hit else []) + fresh
                 self._bt[i, :] = self.NULL
                 self._bt[i, :need] = req._pages
                 self._bt_dirty = True
             self.queue.pop(0)
             self.slots[i] = req
-            self.state = self._reset_slot(self.state, i)
-            req._filled = 0  # prompt tokens already in the cache
-            req._cached = 0  # total cache slots written (prefill + decode)
+            self.state = (
+                self._reset_slot_to(self.state, i, hit_tokens)
+                if self._paged else self._reset_slot(self.state, i)
+            )
+            req._filled = hit_tokens  # prompt tokens already in the cache
+            req._cached = hit_tokens  # total cache slots written
             if not self._chunked:
                 self._prefill_slot_fallback(i, req)
-            elif len(req._tokens) == 1:
+            elif not self._prefilling(req):
+                # Prompt fully resident (single-token prompt, or a full
+                # prefix-cache hit): straight to decode.
                 req._next_token = int(req._tokens[-1])
+
+    def _alloc_pages(self, n):
+        """Allocate ``n`` pool pages, evicting unreferenced prefix-index
+        pages to cover a shortfall; ``None`` when the pool cannot supply
+        them (the caller defers admission or preempts)."""
+        if n <= 0:
+            return []
+        short = n - self.alloc.free_pages
+        if short > 0 and self.prefix is not None:
+            self._drop_indexed(self.prefix.evict(short))
+        try:
+            return self.alloc.alloc(n)
+        except MemoryError:
+            return None
+
+    def _drop_indexed(self, pages):
+        """Return evicted (refcount-0) index pages to the allocator with
+        their position rows masked, so a future owner never attends them."""
+        if not pages:
+            return
+        self.alloc.free(pages)
+        padded = np.full((self.slot_pages,), self.NULL, np.int32)
+        padded[: len(pages)] = pages
+        self.state = self._release_pages(self.state, jnp.asarray(padded))
 
     def _prefilling(self, req) -> bool:
         return getattr(req, "_filled", 0) < len(req._tokens) - 1
@@ -301,9 +379,16 @@ class ServingEngine:
     # ---- paged bookkeeping ----------------------------------------------
 
     def _free_slot_pages(self, i):
-        """Return slot ``i``'s pages to the pool; restore their position
-        rows to PAD_POS so a future owner never attends stale entries."""
+        """Return slot ``i``'s *private* pages to the pool; restore their
+        position rows to PAD_POS so a future owner never attends stale
+        entries.  Pages owned by the prefix index (refcount > 1 elsewhere,
+        or cached for future hits) are only dereferenced — they stay
+        resident with their contents intact."""
         pages = [int(p) for p in self._bt[i] if p != self.NULL]
+        if self.prefix is not None:
+            # release() returns True for index-owned pages: the index keeps
+            # them (other requests may be attending them right now).
+            pages = [p for p in pages if not self.prefix.release(p)]
         if pages:
             self.alloc.free(pages)
             padded = np.full((self.slot_pages,), self.NULL, np.int32)
@@ -368,6 +453,13 @@ class ServingEngine:
                 try:
                     page = self.alloc.alloc(1)[0]
                 except MemoryError:
+                    if self.prefix is not None:
+                        dropped = self.prefix.evict(1)
+                        if dropped:
+                            # Prefer dropping an unreferenced cached prefix
+                            # page over preempting a live request.
+                            self._drop_indexed(dropped)
+                            continue
                     if not self.preempt:
                         raise RuntimeError(
                             f"KV page pool exhausted ({self.max_pages} pages)"
@@ -438,6 +530,13 @@ class ServingEngine:
             if not self._prefilling(req):
                 # Last prompt token is fed by the slot's first decode step.
                 req._next_token = int(req._tokens[-1])
+                if self.prefix is not None:
+                    # Index this prompt's full pages for future requests.
+                    # Already-shared hit pages are skipped (same key).
+                    self.prefix.register(
+                        req._tokens[:req._filled],
+                        [int(p) for p in self._bt[i] if p != self.NULL],
+                    )
                 if self.token_budget is not None:
                     # Metered: this iteration's tokens were already spent on
                     # the slot's prefill allocation; its first decode waits
@@ -549,4 +648,6 @@ class ServingEngine:
         }
         if self._paged:
             out["pages"] = self.alloc.utilization()
+        if self.prefix is not None:
+            out["prefix"] = self.prefix.stats()
         return out

@@ -39,12 +39,17 @@ compiled step for the engine's whole life, exactly like the dense path.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.flash_attention import PAD_POS
 
 __all__ = [
     "PageAllocator",
+    "PrefixIndex",
+    "PrefixHit",
     "init_paged_cache",
     "view_indices",
     "write_coords",
@@ -126,6 +131,265 @@ class PageAllocator:
             "pages_free": self.free_pages,
             "high_water": self.high_water,
             "frac_in_use": self.pages_in_use / self.n_pages,
+        }
+
+
+# ---------------------------------------------------------------------------
+# content-addressed prefix index (host-side, like the allocator)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PrefixHit:
+    """Result of :meth:`PrefixIndex.lookup` for one request's token ids.
+
+    ``pages``: resident page ids whose *full* pages match the request's
+    prefix, in chain order — the caller maps them into its block table after
+    :meth:`PrefixIndex.acquire`.  ``cow_page``/``cow_keep``: when the first
+    divergence falls *inside* a resident page, the page to copy and how many
+    of its leading K/V rows are still valid (copy-on-write: the sharer gets
+    a private duplicate, the resident page is never touched).  ``tokens`` is
+    the total reusable prefix length, ``len(pages) * page_size + cow_keep``.
+    """
+
+    pages: list[int]
+    tokens: int
+    cow_page: int | None = None
+    cow_keep: int = 0
+
+
+class PrefixIndex:
+    """Content-addressed index over resident KV pages (host-side).
+
+    Every *full* page of a prefilled prompt is keyed by a hash chain over
+    token ids: ``key_i = H(key_{i-1} || tokens[i*ps:(i+1)*ps])``, so a key
+    names the page's tokens *and* its entire left context — two requests
+    share page ``i`` iff their first ``(i+1)*ps`` tokens agree, which (with
+    causal attention) is exactly the condition under which their K/V rows
+    are identical.  Requests sharing a system prompt therefore map the same
+    physical pages and prefill skips straight to the miss suffix.
+
+    Pages referenced here are **owned by the index**, refcounted by the
+    number of slots currently mapping them: the engine routes releases
+    through :meth:`release` instead of the allocator, and a page only
+    returns to the allocator when :meth:`evict` pops it (refcount 0, least
+    recently touched, leaf-most first so chains stay reachable).  A
+    divergence inside a page is never resolved by writing the shared page —
+    :meth:`lookup` reports it as a copy-on-write candidate and the engine
+    duplicates it into a private page first (docs/serving.md §7 has the
+    state machine).
+    """
+
+    ROOT = b""
+
+    def __init__(self, page_size: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = page_size
+        self._page_of: dict[bytes, int] = {}  # key -> physical page
+        self._key_of: dict[int, bytes] = {}  # physical page -> key
+        self._refs: dict[int, int] = {}  # physical page -> mapping slots
+        self._tokens: dict[bytes, tuple[int, ...]] = {}  # key -> page tokens
+        self._children: dict[bytes, set[bytes]] = {}  # parent key -> keys
+        self._parent: dict[bytes, bytes] = {}  # key -> parent key
+        self._touch: dict[bytes, int] = {}  # key -> LRU tick
+        self._tick = 0
+        # token-level counters feeding the planner's measured hit rate
+        self.hit_tokens = 0
+        self.lookup_tokens = 0
+        self.cow_copies = 0
+        self.evictions = 0
+
+    # -- invariants (the property-test surface) ----------------------------
+
+    @property
+    def pages(self) -> set[int]:
+        """Physical pages the index currently owns."""
+        return set(self._key_of)
+
+    def refcount(self, page: int) -> int:
+        """Live mappings of ``page`` (0 = resident but evictable)."""
+        return self._refs.get(int(page), 0)
+
+    def total_refs(self) -> int:
+        return sum(self._refs.values())
+
+    # -- hashing -----------------------------------------------------------
+
+    def _chain_keys(self, tokens) -> list[bytes]:
+        """Hash-chain keys of every *full* page of ``tokens``."""
+        import hashlib
+
+        ids = [int(t) for t in tokens]
+        keys = []
+        key = self.ROOT
+        ps = self.page_size
+        for i in range(len(ids) // ps):
+            page_tokens = ids[i * ps:(i + 1) * ps]
+            h = hashlib.sha256(key)
+            h.update(np.asarray(page_tokens, np.int64).tobytes())
+            key = h.digest()
+            keys.append(key)
+        return keys
+
+    def _note(self, key: bytes) -> None:
+        self._tick += 1
+        self._touch[key] = self._tick
+
+    # -- lookup / acquire / register / release -----------------------------
+
+    def lookup(self, tokens) -> PrefixHit:
+        """Longest reusable prefix of ``tokens`` among resident pages.
+
+        Walks the hash chain while keys resolve; at the first non-resident
+        key, checks the matched tail's children for the longest shared
+        token run *inside* the divergence page (the COW candidate).  Hit
+        length is monotone in the shared-token count by construction: every
+        shared full page extends the chain walk, every shared token inside
+        the divergence page extends ``cow_keep``.
+        """
+        ids = [int(t) for t in tokens]
+        ps = self.page_size
+        keys = self._chain_keys(ids)
+        pages: list[int] = []
+        parent = self.ROOT
+        for key in keys:
+            page = self._page_of.get(key)
+            if page is None:
+                break
+            pages.append(page)
+            parent = key
+            self._note(key)
+        hit = len(pages) * ps
+        cow_page, cow_keep = None, 0
+        rest = ids[hit:]
+        if rest:
+            for child in self._children.get(parent, ()):
+                resident = self._tokens[child]
+                common = 0
+                for a, b in zip(rest, resident):
+                    if a != b:
+                        break
+                    common += 1
+                # Only a *strictly partial* match is a COW candidate: a full
+                # page match would have resolved in the chain walk above.
+                if common > cow_keep and common < ps:
+                    cow_page, cow_keep = self._page_of[child], common
+        self.lookup_tokens += len(ids)
+        self.hit_tokens += hit + cow_keep
+        return PrefixHit(
+            pages=pages, tokens=hit + cow_keep,
+            cow_page=cow_page, cow_keep=cow_keep,
+        )
+
+    def acquire(self, pages) -> None:
+        """Map index-owned ``pages`` into one more slot (refcount += 1)."""
+        for p in pages:
+            p = int(p)
+            if p not in self._key_of:
+                raise ValueError(f"page {p} is not index-owned")
+            self._refs[p] += 1
+            self._note(self._key_of[p])
+
+    def register(self, tokens, pages) -> int:
+        """Index a prefilled prompt's full pages, claiming this request's
+        mapping as one reference each.
+
+        ``pages`` are the request's block-table pages in logical order;
+        only the first ``len(tokens) // page_size`` (full) pages are
+        indexable.  A key that is already resident is skipped — the
+        duplicate page stays private to its request (first writer wins; the
+        engine frees the duplicate through the allocator when the request
+        ends).  Returns the number of newly indexed pages.
+        """
+        ids = [int(t) for t in tokens]
+        ps = self.page_size
+        keys = self._chain_keys(ids)
+        new = 0
+        parent = self.ROOT
+        for i, (key, page) in enumerate(zip(keys, pages)):
+            page = int(page)
+            if key not in self._page_of:
+                if page in self._key_of:
+                    raise ValueError(
+                        f"page {page} already indexed under another key"
+                    )
+                self._page_of[key] = page
+                self._key_of[page] = key
+                self._refs[page] = 1
+                self._tokens[key] = tuple(ids[i * ps:(i + 1) * ps])
+                self._parent[key] = parent
+                self._children.setdefault(parent, set()).add(key)
+                self._note(key)
+                new += 1
+            parent = key
+        return new
+
+    def release(self, page) -> bool:
+        """Drop one slot's mapping of ``page``.
+
+        Returns True when the page is index-owned (the caller must NOT free
+        it to the allocator — it stays resident for future hits until
+        :meth:`evict` pops it); False when the page is unknown here (a
+        private page the caller frees normally).
+        """
+        page = int(page)
+        key = self._key_of.get(page)
+        if key is None:
+            return False
+        if self._refs[page] <= 0:
+            raise ValueError(f"release of page {page} with refcount 0")
+        self._refs[page] -= 1
+        self._note(key)
+        return True
+
+    def evict(self, n: int) -> list[int]:
+        """Un-index up to ``n`` refcount-0 pages, least recently touched
+        first with leaves before interior nodes (evicting a chain's interior
+        strands its resident descendants for future lookups — they stay
+        refcounted and safe, just unreachable).  Returns the page ids; the
+        caller resets their position rows and frees them to the allocator.
+        """
+        out: list[int] = []
+        while len(out) < n:
+            candidates = [
+                key for key, page in self._page_of.items()
+                if self._refs[page] == 0
+            ]
+            if not candidates:
+                break
+            candidates.sort(
+                key=lambda k: (bool(self._children.get(k)), self._touch[k])
+            )
+            out.append(self._drop(candidates[0]))
+        self.evictions += len(out)
+        return out
+
+    def _drop(self, key: bytes) -> int:
+        page = self._page_of.pop(key)
+        del self._key_of[page]
+        del self._refs[page]
+        del self._tokens[key]
+        parent = self._parent.pop(key)
+        kids = self._children.get(parent)
+        if kids:
+            kids.discard(key)
+            if not kids:
+                del self._children[parent]
+        self._children.pop(key, None)
+        self._touch.pop(key, None)
+        return page
+
+    def stats(self) -> dict:
+        rate = self.hit_tokens / self.lookup_tokens if self.lookup_tokens else 0.0
+        return {
+            "indexed_pages": len(self._key_of),
+            "shared_refs": self.total_refs(),
+            "hit_tokens": self.hit_tokens,
+            "lookup_tokens": self.lookup_tokens,
+            "hit_rate": rate,
+            "cow_copies": self.cow_copies,
+            "evictions": self.evictions,
         }
 
 

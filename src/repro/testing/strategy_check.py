@@ -758,6 +758,118 @@ def check_registry_plugin():
     print("PASS registry plugin (toy strategy through sp_attention)")
 
 
+def check_prefix():
+    """The adaptive-prefill tentpole on a real mesh, two halves:
+
+    1. warm-cache serving — a mesh-built engine with the content-addressed
+       prefix cache serves a repeated prompt (full hit) and a mid-page fork
+       (one COW copy) emitting exactly the tokens of the cold no-cache
+       engine, with zero prefill tokens spent on the fully resident prompt;
+    2. prefill-ring byte audit — for ``passkv_ring`` and ``passq_ring`` at
+       P=4 and P=<device count>, the symbolic schedule audit (positions
+       included) equals the per-direction bytes measured on compiled HLO,
+       and the positions-free audit equals the registered ``comm_cost``
+       closed form exactly (``audit_strategy`` returns no findings).
+    """
+    from repro.analysis.comm_audit import (
+        AuditDims,
+        audit_schedule,
+        audit_strategy,
+    )
+    from repro.configs import ARCHS
+    from repro.core.strategies import get_strategy
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.models import build_model
+    from repro.serving.engine import ServingEngine
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev // 4, 4), ("data", "model"))
+    cfg = ARCHS["qwen3-1.7b"].reduced(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16, d_ff=128,
+        vocab_size=97, dtype="float32", param_dtype="float32",
+    )
+    pctx = ParallelContext(mesh=mesh, sp_axes=("model",), impl="xla", block_k=8)
+    bundle = build_model(cfg, pctx)
+    params = bundle.init(jax.random.PRNGKey(0))
+    prompt = list(np.random.default_rng(61).integers(1, 90, 25))
+    fork = prompt[:20] + [(t + 3) % 90 + 1 for t in prompt[20:]]
+
+    def engine(prefix_cache):
+        return ServingEngine(
+            bundle, params, max_batch=2, max_len=64, prefill_chunk=8,
+            page_size=8, max_pages=32, prefix_cache=prefix_cache,
+        )
+
+    cold_eng = engine(False)
+    cold = cold_eng.submit(prompt, max_new_tokens=4)
+    cold_fork = cold_eng.submit(fork, max_new_tokens=4)
+    cold_eng.run()
+
+    eng = engine(True)
+    first = eng.submit(prompt, max_new_tokens=4)
+    eng.run()
+    pt_cold = eng.counters["prefill_tokens"]
+    warm = eng.submit(prompt, max_new_tokens=4)
+    eng.run()
+    assert eng.counters["prefill_tokens"] == pt_cold, (
+        "fully resident prompt must not re-prefill"
+    )
+    forked = eng.submit(fork, max_new_tokens=4)
+    eng.run()
+    s = eng.stats()["prefix"]
+    assert first.output == warm.output == cold.output, (
+        first.output, warm.output, cold.output,
+    )
+    assert forked.output == cold_fork.output, (forked.output, cold_fork.output)
+    assert s["cow_copies"] == 1 and s["hit_tokens"] >= 40, s
+    print(
+        f"PASS prefix warm serving == cold engine "
+        f"(hit rate {s['hit_rate']:.2f}, 1 COW, {n_dev} devices)"
+    )
+
+    B, S, Hq, Hkv, D = 2, 256, 4, 4, 32
+    q, k, v = _data(B=B, S=S, Hq=Hq, Hkv=Hkv, seed=67)
+    for P_sp in (4, n_dev):
+        mesh_p = jax.make_mesh((n_dev // P_sp, P_sp), ("data", "model"))
+        B_loc = B // (n_dev // P_sp)
+        for strategy in ("passkv_ring", "passq_ring"):
+            pctx_p = ParallelContext(
+                mesh=mesh_p, sp_axes=("model",), strategy=strategy,
+                impl="xla", block_q=64, block_k=64,
+            )
+            qz, kz, vz = (to_zigzag(x, P_sp, axis=1) for x in (q, k, v))
+            pos = _positions(S, P_sp, "zigzag")
+            fn = jax.jit(
+                lambda q, k, v, p, pctx=pctx_p: sp_attention(
+                    q, k, v, p, p, pctx=pctx, causal=True
+                )
+            )
+            hlo = fn.lower(qz, kz, vz, pos).compile().as_text()
+            st = analyze_hlo(hlo, world=n_dev)
+            desc = get_strategy(strategy)
+            spec = desc.schedule_spec(P_sp, S_loc=S // P_sp, window=None)
+            dims = AuditDims(
+                B=B_loc, S_loc=S // P_sp, Hq=Hq, Hkv=Hkv, D=D,
+                bytes_per_elem=4, travel_bytes=4,
+            )
+            fwd, bwd, findings = audit_schedule(
+                spec, P_sp, dims, include_positions=True, subject=strategy
+            )
+            assert not findings, findings
+            assert (fwd, bwd) == (st.link_bytes_fwd, st.link_bytes_bwd), (
+                strategy, P_sp, (fwd, bwd),
+                (st.link_bytes_fwd, st.link_bytes_bwd),
+            )
+            assert audit_strategy(
+                desc, B=B_loc, S=S, Hq=Hq, Hkv=Hkv, D=D, P=P_sp,
+                bytes_per_elem=4, travel_dtype="float32",
+            ) == []
+            print(
+                f"PASS prefix ring bytes {strategy} P={P_sp}: "
+                f"audit == HLO == comm_cost ({fwd}, {bwd})"
+            )
+
+
 CHECKS = {
     "strategies": check_strategies,
     "overlap": check_overlap,
@@ -769,6 +881,7 @@ CHECKS = {
     "decode": check_decode,
     "prefill": check_prefill_chunk,
     "paged": check_paged,
+    "prefix": check_prefix,
     "scan": check_scan,
     "scan_hybrid": check_scan_hybrid,
     "moe": check_moe,

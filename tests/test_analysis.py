@@ -30,6 +30,7 @@ from repro.analysis.preconditions import (
 )
 from repro.analysis.report import RULES, Finding, Report
 from repro.analysis.schedule_check import check_schedule_spec
+from repro.core.prefill_rings import passkv_ring_spec, passq_ring_spec
 from repro.core.ring_attention import ring_bidir_spec, ring_spec
 from repro.core.schedule import (
     Compute,
@@ -172,6 +173,40 @@ def test_validate_errors_reported_not_raised():
         epilogue=s.schedule.epilogue, static=s.schedule.static,
     ))
     assert "SCHED-VALIDATE" in rules_of(mut)
+
+
+def test_passkv_double_send_unmatched():
+    # the KV-A half is sent twice into the same receive slot: two writers,
+    # one buffer — the step's receives no longer match its sends.
+    s = passkv_ring_spec(P)
+    step = Step(
+        Send(("kva",), 1), Send(("kva",), 2, into=("kva",)),
+        Send(("kvb",), -1),
+        Compute("q", ("kva", "kvb"), "p"), Merge("acc", "p"),
+    )
+    mut = replace(s, schedule=replace(s.schedule, prologue=(step,), body=step))
+    assert "SCHED-UNMATCHED" in rules_of(mut)
+
+
+def test_passkv_missing_kv_hop_coverage():
+    # the counter-rotating KV-B half never moves: every rank re-attends its
+    # own B half P-1 times and never sees the others'.
+    s = passkv_ring_spec(P)
+    step = Step(
+        Send(("kva",), 1), Compute("q", ("kva", "kvb"), "p"), Merge("acc", "p")
+    )
+    mut = replace(s, schedule=replace(s.schedule, prologue=(step,), body=step))
+    assert "SCHED-COVERAGE" in rules_of(mut)
+
+
+def test_passq_desynced_acc_merge_mismatch():
+    # the lagging accumulator is shipped against the query's rotation: the
+    # merge folds a partial belonging to a different rank's query.
+    s = passq_ring_spec(P)
+    computes = (Compute("q", ("kv",), "p"), Merge("acc", "p"))
+    body = Step(Send(("q",), 1), Send(("acc",), -1), *computes)
+    mut = replace(s, schedule=replace(s.schedule, body=body))
+    assert "SCHED-MERGE-MISMATCH" in rules_of(mut)
 
 
 def test_faithful_and_window_walks_cover_small_rings():

@@ -323,3 +323,109 @@ def test_engine_paged_rejects_bad_knobs():
     assert eng.cap == 32  # max_len rounds up to whole pages
     with pytest.raises(ValueError, match="paged capacity"):
         eng.submit(list(range(1, 33)))
+
+
+# ---------------------------------------------------------------------------
+# content-addressed prefix cache (engine integration; index-level invariants
+# are property-tested in test_prefix_cache.py)
+# ---------------------------------------------------------------------------
+
+
+def _prefix_engine(bundle, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_pages", 32)
+    kw.setdefault("prefix_cache", True)
+    return ServingEngine(bundle, params, **kw)
+
+
+def test_prefix_cache_requires_paged():
+    cfg, bundle, params = _setup()
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(
+            bundle, params, max_batch=2, max_len=32, prefix_cache=True
+        )
+
+
+def test_engine_prefix_warm_hit_skips_prefill_and_matches_cold():
+    """A repeated prompt maps the already-resident pages: zero prefill
+    tokens on the warm run, and the decoded chain is *bitwise* the cold
+    one — the shared K/V rows feeding it are physically the same pages."""
+    cfg, bundle, params = _setup()
+    rng = np.random.default_rng(7)
+    prompt = list(rng.integers(1, 90, 25))  # 3 full pages of prompt[:-1]
+
+    eng = _prefix_engine(bundle, params)
+    cold = eng.submit(prompt, max_new_tokens=6)
+    eng.run()
+    cold_prefill = eng.counters["prefill_tokens"]
+    assert eng.stats()["prefix"]["indexed_pages"] == 3
+
+    warm = eng.submit(prompt, max_new_tokens=6)
+    eng.run()
+    assert warm.output == cold.output
+    assert eng.counters["prefill_tokens"] == cold_prefill, (
+        "a fully resident prompt must not re-prefill"
+    )
+    s = eng.stats()["prefix"]
+    assert s["hit_tokens"] >= 24 and s["cow_copies"] == 0
+    step = _legacy_step(bundle)
+    assert_greedy_chain_matches(bundle, params, cold, 2, 64, step)
+    assert_greedy_chain_matches(bundle, params, warm, 2, 64, step)
+
+
+def test_engine_prefix_cow_divergence_never_mutates_shared_page():
+    """A prompt diverging *inside* a resident page decodes oracle-exact via
+    a private copy (exactly one COW), and the resident page's K/V bytes are
+    untouched."""
+    cfg, bundle, params = _setup()
+    rng = np.random.default_rng(7)
+    base = list(rng.integers(1, 90, 25))
+    fork = base[:20] + [(t + 1) % 90 + 1 for t in base[20:]]  # page-3 split
+
+    eng = _prefix_engine(bundle, params)
+    eng.submit(base, max_new_tokens=6)
+    eng.run()
+    shared = sorted(eng.prefix.pages)
+    k_before = np.asarray(eng.state["k"])[:, shared].copy()
+    v_before = np.asarray(eng.state["v"])[:, shared].copy()
+
+    forked = eng.submit(fork, max_new_tokens=6)
+    eng.run()
+    assert eng.stats()["prefix"]["cow_copies"] == 1
+    np.testing.assert_array_equal(
+        np.asarray(eng.state["k"])[:, shared], k_before,
+        err_msg="COW must copy, never write the shared page",
+    )
+    np.testing.assert_array_equal(np.asarray(eng.state["v"])[:, shared], v_before)
+    step = _legacy_step(bundle)
+    assert_greedy_chain_matches(bundle, params, forked, 2, 64, step)
+
+
+def test_engine_preemption_keeps_shared_prefix_pages():
+    """Regression: preempting a request that maps shared (refcount > 1)
+    prefix pages must drop only its private suffix — the engine once freed
+    the whole block-table row to the allocator, double-freeing pages the
+    surviving request was still attending (and the index still owned).
+    Both chains must end oracle-exact with refcounts conserved."""
+    cfg, bundle, params = _setup()
+    rng = np.random.default_rng(7)
+    prompt = list(rng.integers(1, 90, 25))
+    # 8-page pool: two 25-token prompts + 20 decode tokens each cannot
+    # coexist without preemption, but the 3-page shared prefix fits
+    eng = _prefix_engine(bundle, params, max_pages=8)
+    a = eng.submit(prompt, max_new_tokens=20)
+    b = eng.submit(prompt, max_new_tokens=20)
+    eng.run()
+    s = eng.stats()
+    assert s["preemptions"] >= 1, "pool was sized to force a preemption"
+    assert len(a.output) == 20 and len(b.output) == 20
+    # conservation after the dust settles: nothing holds a mapping, every
+    # surviving indexed page is exactly the allocator's outstanding set
+    assert eng.prefix.total_refs() == 0
+    assert s["pages"]["pages_in_use"] == len(eng.prefix.pages)
+    step = _legacy_step(bundle)
+    assert_greedy_chain_matches(bundle, params, a, 2, 64, step)
+    assert_greedy_chain_matches(bundle, params, b, 2, 64, step)

@@ -1,0 +1,121 @@
+"""Property-based tests (hypothesis) on the content-addressed prefix index.
+
+The index is host-side bookkeeping with sharp invariants, which makes it a
+natural property-test surface (docs/serving.md §7):
+
+- **refcount conservation** — at every point of any acquire/register/release
+  interleaving, the index's total refcount equals the number of live
+  (request, index-owned page) mappings, and once every request releases,
+  eviction can drain the index completely.
+- **registration never mutates resident entries** — a divergent prompt
+  registering its own pages leaves every previously indexed page resolving
+  to the same physical page with the same tokens (the index-level face of
+  copy-on-write: divergence adds a sibling, never rewrites a shared page).
+- **hit-length monotonicity** — the reusable prefix reported by ``lookup``
+  is monotone in the number of tokens a request shares with a resident
+  prompt, across page boundaries and inside the divergence page (COW run).
+
+Engine-level counterparts (bitwise K/V non-mutation under COW, preemption
+keeping shared pages) are deterministic and live in test_paged_cache.py;
+this file needs no JAX at all.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, not a collection error
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import PrefixIndex, pages_for
+
+# Small alphabet + short prompts so random prompts actually share prefixes.
+TOKENS = st.lists(st.integers(0, 3), min_size=1, max_size=24)
+
+
+def _simulate(index, prompts):
+    """Admit every prompt against ``index`` the way the engine does —
+    lookup, acquire the hit, register over fresh private page ids — and
+    return each request's index-owned mapping set."""
+    next_page = max(index.pages, default=999) + 1  # ids disjoint from resident
+    mappings = []
+    for prompt in prompts:
+        hit = index.lookup(prompt)
+        index.acquire(hit.pages)
+        need = pages_for(max(len(prompt), 1), index.page_size)
+        fresh = list(range(next_page, next_page + need - len(hit.pages)))
+        next_page += len(fresh)
+        index.register(prompt, list(hit.pages) + fresh)
+        # this request's index-owned pages: the hit (acquired) plus any of
+        # its fresh pages that register() just indexed
+        mappings.append([p for p in hit.pages + fresh if p in index.pages])
+    return mappings
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    prompts=st.lists(TOKENS, min_size=1, max_size=6),
+    page_size=st.sampled_from([1, 2, 4]),
+    release_order=st.randoms(use_true_random=False),
+)
+def test_refcount_conservation(prompts, page_size, release_order):
+    index = PrefixIndex(page_size)
+    mappings = _simulate(index, prompts)
+    live = [list(m) for m in mappings]
+    assert index.total_refs() == sum(len(m) for m in live)
+    # release in a random interleaving; conservation holds at every step
+    flat = [(i, p) for i, m in enumerate(live) for p in m]
+    release_order.shuffle(flat)
+    for i, page in flat:
+        assert index.release(page) is True
+        live[i].remove(page)
+        assert index.total_refs() == sum(len(m) for m in live)
+    # fully released: every page is evictable, and eviction drains the index
+    resident = set(index.pages)
+    dropped = index.evict(len(resident))
+    assert sorted(dropped) == sorted(resident)
+    assert index.pages == set() and index.total_refs() == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    first=TOKENS,
+    second=TOKENS,
+    page_size=st.sampled_from([1, 2, 4]),
+)
+def test_register_never_mutates_resident_entries(first, second, page_size):
+    index = PrefixIndex(page_size)
+    _simulate(index, [first])
+    before = {p: index._key_of[p] for p in index.pages}
+    tokens_before = dict(index._tokens)
+    _simulate(index, [second])  # may share a prefix, diverge, or both
+    for page, key in before.items():
+        assert index._key_of[page] == key, "resident page re-keyed"
+        assert index._tokens[key] == tokens_before[key], "resident tokens changed"
+    # and the first prompt still fully resolves
+    hit = index.lookup(first)
+    assert hit.tokens >= (len(first) // page_size) * page_size
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    resident=st.lists(st.integers(0, 3), min_size=4, max_size=24),
+    shares=st.tuples(st.integers(0, 24), st.integers(0, 24)),
+    page_size=st.sampled_from([2, 4]),
+    data=st.data(),
+)
+def test_hit_length_monotone_in_shared_tokens(resident, shares, page_size, data):
+    index = PrefixIndex(page_size)
+    _simulate(index, [resident])
+    s1, s2 = sorted(min(s, len(resident)) for s in shares)
+    suffix_len = len(resident) - min(s1, s2) + 1
+    # divergent suffixes drawn outside the resident alphabet
+    hits = []
+    for s in (s1, s2):
+        suffix = data.draw(
+            st.lists(st.integers(10, 13), min_size=suffix_len, max_size=suffix_len)
+        )
+        hits.append(index.lookup(list(resident[:s]) + suffix).tokens)
+    assert hits[0] <= hits[1], (
+        f"sharing {s2} tokens hit {hits[1]}, but sharing only {s1} hit {hits[0]}"
+    )
+    # and a hit never exceeds what is actually shared
+    assert hits[0] <= s1 and hits[1] <= s2

@@ -97,6 +97,19 @@ def test_sp_paged_serving():
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("devices", [4, 8])
+def test_prefix_cache_and_prefill_rings(devices):
+    """Content-addressed prefix cache on a mesh (warm serving == cold
+    engine, one COW on a mid-page fork) and the pass-KV/pass-Q prefill
+    rings' per-direction bytes: symbolic audit == compiled HLO ==
+    registered comm_cost, at 4 and 8 fake devices."""
+    out = _run_check(
+        "repro.testing.strategy_check", "prefix", devices=devices
+    )
+    assert out.count("PASS prefix ring bytes") == 4
+
+
+@pytest.mark.slow
 def test_sp_scan():
     _run_check("repro.testing.strategy_check", "scan", "scan_hybrid")
 
