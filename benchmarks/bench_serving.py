@@ -17,6 +17,11 @@ Three sections:
     registered shared pages and prefill only their unique suffix, so warm
     TTFT must undercut half the cold TTFT.  Writes
     ``benchmarks/BENCH_prefix.json``.
+  * **resilience** (reduced model, CPU): the same engine under Bernoulli
+    fault injection at every tick point — goodput at 0/1/5% fault rates
+    (surviving outputs bit-identical to the fault-free oracle),
+    snapshot-restart recovery latency, and the degraded-mode TTFT with
+    prefix splicing disabled.  Writes ``benchmarks/BENCH_resilience.json``.
   * **modeled** (planner cost models): per-schedule link bytes for a
     production GQA shape — the registered ``decode`` / ``prefill``
     (cache-resident psum) rows against what circulating schedules
@@ -24,7 +29,8 @@ Three sections:
     sharded cache were rotated every chunk.  These are the same ``comm_cost``
     models ``plan_decode`` / ``plan_prefill`` attach to real plans.
 
-Run: ``PYTHONPATH=src python -m benchmarks.bench_serving``
+Run: ``PYTHONPATH=src python -m benchmarks.bench_serving`` (all sections)
+or name sections: ``... -m benchmarks.bench_serving resilience``.
 """
 
 from __future__ import annotations
@@ -341,13 +347,188 @@ def modeled(B=1, prompt=32768, chunk=256, Hq=64, Hkv=8, D=128, P=4, b=2):
     return rows
 
 
+RESILIENCE_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "BENCH_resilience.json"
+)
+
+
+def resilience(rates=(0.0, 0.01, 0.05), n_req=6, max_new=8,
+               out_path=RESILIENCE_JSON):
+    """Fault-injected serving under the resilience runtime
+    (``serving/resilience.py``): goodput at Bernoulli fault rates 0/1/5%
+    over every engine tick point, snapshot-restart recovery latency, and
+    the degraded-mode (splicing-disabled) TTFT.
+
+    The 0% run doubles as the oracle — every request a faulted run still
+    completes must emit *bit-identical* output (quarantine/retry changes
+    the schedule, never the tokens).  Recovery latency is the wall time of
+    ``ServingEngine.from_snapshot`` (manifest + npz + sidecar -> a serving
+    engine mid-flight).  Results land in ``benchmarks/BENCH_resilience.json``.
+    """
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro.configs import ARCHS
+    from repro.core.api import ParallelContext
+    from repro.models import build_model
+    from repro.serving.engine import ServingEngine
+    from repro.serving.resilience import FaultPlan
+
+    cfg = ARCHS["qwen3-1.7b"].reduced(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_head=32, d_ff=128,
+        vocab_size=97,
+    )
+    bundle = build_model(cfg, ParallelContext(mesh=None, impl="xla"))
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    prompts = [
+        list(rng.integers(1, cfg.vocab_size, int(rng.integers(8, 17))))
+        for _ in range(n_req)
+    ]
+
+    def engine(**kw):
+        return ServingEngine(
+            bundle, params, max_batch=3, max_len=64, prefill_chunk=8,
+            page_size=8, max_pages=48, prefix_cache=True,
+            max_retries=8, retry_backoff=1, audit_every=4, **kw,
+        )
+
+    def serve(plan=None):
+        eng = engine(fault_plan=plan)
+        reqs = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+        t0 = time.perf_counter()
+        eng.run()
+        return eng, reqs, time.perf_counter() - t0
+
+    serve()  # throwaway: pay every jit compile before timing anything
+
+    print(f"\n### resilience: {n_req} requests under Bernoulli fault "
+          f"injection, all tick points (reduced {cfg.name}, CPU)")
+    print("| fault rate | faults | recoveries | done | goodput tok/s | "
+          "surviving outputs |")
+    print("|---|---|---|---|---|---|")
+    rows, goodput, oracle = [], [], {}
+    for rate in rates:
+        plan = FaultPlan.bernoulli(rate, seed=5) if rate else None
+        eng, reqs, dt = serve(plan)
+        done = [r for r in reqs if r.status == "done"]
+        tokens = sum(len(r.output) for r in done)
+        tps = tokens / dt
+        c = eng.counters
+        if rate == 0.0:
+            assert len(done) == n_req and c["faults"] == 0, eng.stats()
+            oracle = {r.uid: r.output for r in reqs}
+            match = "oracle"
+        else:
+            assert done, "a faulted run must still finish some requests"
+            for r in done:
+                assert r.output == oracle[r.uid], (rate, r.uid, r.output)
+            match = f"{len(done)}/{n_req} bitwise"
+        eng.auditor.check()  # post-chaos cache invariants must hold
+        print(f"| {rate:.0%} | {c['faults']} | {c['recoveries']} "
+              f"| {len(done)}/{n_req} | {tps:.1f} | {match} |")
+        goodput.append({
+            "rate": rate, "faults": c["faults"],
+            "recoveries": c["recoveries"], "quarantines": c["quarantines"],
+            "completed": len(done), "failed": n_req - len(done),
+            "goodput_tok_s": tps,
+        })
+        rows.append((f"serving_resil/rate{rate:g}_goodput", tps, "tok/s"))
+
+    # snapshot-restart recovery latency: kill mid-flight, time the rebuild
+    with tempfile.TemporaryDirectory() as snapdir:
+        eng = engine(snapshot_dir=snapdir)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=max_new)
+        eng.run(max_steps=3)
+        step = eng.snapshot()
+        del eng  # the "killed" process
+        t0 = time.perf_counter()
+        eng2 = ServingEngine.from_snapshot(bundle, params, snapdir, step=step)
+        recovery_ms = (time.perf_counter() - t0) * 1e3
+        reqs = {r.uid: r for r in eng2.done}
+        for i, slot in enumerate(eng2.slots):
+            if slot is not None:
+                reqs[slot.uid] = slot
+        for r in eng2.queue:
+            reqs[r.uid] = r
+        eng2.run()
+        assert all(reqs[u].output == o for u, o in oracle.items()), (
+            "restart must be token-exact vs the uninterrupted oracle"
+        )
+    print(f"recovery: {recovery_ms:.0f} ms to restore a mid-flight engine "
+          f"from snapshot step {step} (then token-exact to completion)")
+    rows.append(("serving_resil/recovery_latency", recovery_ms * 1e3, "us"))
+
+    # degraded-mode TTFT: ladder rung 1 disables prefix splicing, so a
+    # fully cached prompt pays its whole prefill again — availability is
+    # kept, the warm-TTFT win is what degradation costs.
+    shared = list(rng.integers(1, cfg.vocab_size, 40))
+
+    def ttft_degraded(level):
+        eng = engine()
+        eng.submit(shared, max_new_tokens=4)
+        eng.run()  # registers the prompt's pages
+        eng.ladder.level = level
+        req = eng.submit(shared, max_new_tokens=4)
+        eng.run()
+        return (req.t_first - req.t_submit) * 1e3
+
+    warm, degraded = ttft_degraded(0), ttft_degraded(1)
+    assert degraded > warm, (warm, degraded)
+    print(f"degraded-mode TTFT (splicing off): {degraded:.1f} ms vs "
+          f"{warm:.1f} ms warm — {degraded / warm:.1f}x, availability kept")
+    rows.append(("serving_resil/warm_ttft", warm * 1e3, "us"))
+    rows.append(("serving_resil/degraded_ttft", degraded * 1e3, "us"))
+
+    payload = {
+        "setup": {
+            "model": cfg.name,
+            "n_requests": n_req,
+            "max_new": max_new,
+            "rates": list(rates),
+            "audit_every": 4,
+            "max_retries": 8,
+        },
+        "results": {
+            "goodput": goodput,
+            "recovery_latency_ms": recovery_ms,
+            "degraded_mode": {
+                "warm_ttft_ms": warm,
+                "degraded_ttft_ms": degraded,
+                "degraded_over_warm": degraded / warm,
+            },
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out_path}")
+    return rows
+
+
+SECTIONS = {
+    "modeled": modeled,
+    "measured": measured,
+    "paged": paged_vs_dense,
+    "prefix": warm_prefix,
+    "resilience": resilience,
+}
+
+
 def run():
-    rows = modeled()
-    rows += measured()
-    rows += paged_vs_dense()
-    rows += warm_prefix()
+    rows = []
+    for fn in SECTIONS.values():
+        rows += fn()
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    for name in sys.argv[1:] or ["all"]:
+        if name == "all":
+            run()
+        else:
+            SECTIONS[name]()

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 import time
@@ -31,6 +32,9 @@ import jax
 import numpy as np
 
 __all__ = ["CheckpointManager"]
+
+_STEP_DIR_RE = re.compile(r"step_(\d+)")
+_MARKER_RE = re.compile(r"step_(\d+)\.COMMITTED")
 
 
 def _flatten(tree):
@@ -105,13 +109,30 @@ class CheckpointManager:
             e, self._error = self._error, None
             raise e
 
+    def abandon(self):
+        """Discard an in-flight or crashed async save without surfacing it.
+
+        After a failure-and-restore, the pre-failure async write (and any
+        error it died with) is void: the restored run re-saves from its
+        resumed step.  The daemon writer thread is dropped, not joined —
+        its tmp-dir output is swept by the next save's ``_gc``, and the
+        COMMITTED marker protocol means a half-landed write can never be
+        restored from."""
+        self._thread = None
+        self._error = None
+
     # ---------------------------------------------------------- restore
 
     def latest_step(self) -> int | None:
         steps = []
         for name in os.listdir(self.dir):
-            if name.endswith(".COMMITTED"):
-                steps.append(int(name[len("step_"):-len(".COMMITTED")]))
+            m = _MARKER_RE.fullmatch(name)
+            if m is None:
+                continue  # stray file — not ours to interpret
+            step = int(m.group(1))
+            if not os.path.isdir(self._step_dir(step)):
+                continue  # orphaned marker (crash between dir and marker GC)
+            steps.append(step)
         return max(steps) if steps else None
 
     def restore(self, step: int, template, *, shardings=None):
@@ -142,7 +163,13 @@ class CheckpointManager:
             arr = data[key]
             want = np.dtype(leaf.dtype)
             if arr.dtype != want:
-                arr = arr.astype(want)
+                if arr.dtype.kind == "V" and arr.dtype.itemsize == want.itemsize:
+                    # npz round-trips ml_dtypes arrays (bfloat16 serving KV
+                    # pools) as raw void bytes; reinterpret bit-exact — no
+                    # cast function exists for void -> bfloat16.
+                    arr = arr.view(want)
+                else:
+                    arr = arr.astype(want)
             if flat_sh:
                 out.append(jax.device_put(arr, flat_sh[key]))
             else:
@@ -164,15 +191,30 @@ class CheckpointManager:
             full = os.path.join(self.dir, name)
             if name.endswith(".tmp"):
                 shutil.rmtree(full, ignore_errors=True)
-            elif name.startswith("step_") and os.path.isdir(full):
+                continue
+            m = _STEP_DIR_RE.fullmatch(name)
+            if m is not None and os.path.isdir(full):
                 if not os.path.exists(full + ".COMMITTED"):
                     # uncommitted (crashed mid-save) — remove
                     shutil.rmtree(full, ignore_errors=True)
                 else:
-                    committed.append(int(name[len("step_"):]))
+                    committed.append(int(m.group(1)))
+                continue
+            m = _MARKER_RE.fullmatch(name)
+            if m is not None and not os.path.isdir(self._step_dir(int(m.group(1)))):
+                # orphaned marker (crash window of a pre-fix GC) — remove
+                try:
+                    os.remove(full)
+                except OSError:
+                    pass
+            # anything else in the directory is not ours — leave it alone
         for step in sorted(committed)[: -self.keep] if self.keep else []:
-            shutil.rmtree(self._step_dir(step), ignore_errors=True)
+            # Marker first: a crash between the two deletes must leave an
+            # *uncommitted* dir (swept next GC), never a committed marker
+            # pointing at nothing — latest_step() would offer a step that
+            # cannot restore.
             try:
                 os.remove(self._step_dir(step) + ".COMMITTED")
             except OSError:
                 pass
+            shutil.rmtree(self._step_dir(step), ignore_errors=True)

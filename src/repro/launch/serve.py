@@ -13,6 +13,13 @@ paged pool (``serving/kv_cache.py``): admission by free pages, page-granular
 decode growth, and (``--preempt``) recompute-style eviction when
 ``--max-pages`` runs dry — see docs/serving.md §6.
 
+``--fault-rate`` turns on the resilience runtime's chaos injector
+(``serving/resilience.py``): every engine tick point fails with that
+probability, exercised through quarantine/retry, the degrade ladder, and
+the cache auditor; ``--snapshot-dir``/``--snapshot-every`` add periodic
+serving-state snapshots restartable via ``ServingEngine.from_snapshot``
+— see docs/resilience.md.
+
 Example (CPU, reduced model, 16 batched requests, paged):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
       --requests 16 --max-new 24 --prefill-chunk 16 --token-budget 32 \
@@ -141,6 +148,28 @@ def main(argv=None):
                     "every request (exercises the prefix cache)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="chaos mode: every engine tick point (admit/"
+                    "prefill/decode/alloc/evict/cow/sample) fails with this "
+                    "probability; quarantine/retry + the degrade ladder keep "
+                    "the batch serving (docs/resilience.md)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for --fault-rate's injector (reproducible)")
+    ap.add_argument("--audit-every", type=int, default=0,
+                    help="run the cache-invariant auditor every N engine "
+                    "ticks (0 = only after recoveries)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="per-request quarantine/retry budget before a "
+                    "request is failed permanently")
+    ap.add_argument("--retry-backoff", type=int, default=1,
+                    help="base of the exponential re-admission backoff, "
+                    "in engine ticks")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="serving-state snapshot directory (enables "
+                    "ServingEngine.from_snapshot restart)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot the engine every N ticks while requests "
+                    "are in flight (needs --snapshot-dir)")
     args = ap.parse_args(argv)
 
     cfg = ARCHS[args.arch]
@@ -154,12 +183,20 @@ def main(argv=None):
         cfg, max_batch=args.max_batch, chunk=args.prefill_chunk,
         max_len=args.max_len, page_size=args.page_size,
     )
+    plan = None
+    if args.fault_rate:
+        from repro.serving.resilience import FaultPlan
+
+        plan = FaultPlan.bernoulli(args.fault_rate, seed=args.fault_seed)
     eng = ServingEngine(
         bundle, params, max_batch=args.max_batch, max_len=args.max_len,
         temperature=args.temperature, seed=args.seed,
         prefill_chunk=args.prefill_chunk, token_budget=args.token_budget,
         page_size=args.page_size, max_pages=args.max_pages,
         preempt=args.preempt, prefix_cache=args.prefix_cache,
+        fault_plan=plan, audit_every=args.audit_every,
+        max_retries=args.max_retries, retry_backoff=args.retry_backoff,
+        snapshot_dir=args.snapshot_dir, snapshot_every=args.snapshot_every,
     )
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size, args.shared_prefix)
@@ -203,6 +240,16 @@ def main(argv=None):
             cfg, max_len=args.max_len,
             table_pages=pages_for(args.max_len, args.page_size),
             prefix_hit_rate=p["hit_rate"],
+        )
+    if s["faults"] or s["snapshots"] or args.audit_every:
+        d, st = s["degrade"], s["step_time"]
+        print(
+            f"resilience: {s['faults']} faults, {s['recoveries']} recoveries, "
+            f"{s['quarantines']} quarantines, {s['failed_requests']} failed, "
+            f"{s['load_shed']} shed; ladder {d['mode']} "
+            f"({d['escalations']} escalations); {s['snapshots']} snapshots; "
+            f"step median {st['median_s']*1e3:.1f} ms "
+            f"({st['straggler_events']} straggler events)"
         )
     for r in done[:3]:
         print(f"  req {r.uid}: prompt {r.prompt.tolist()} -> {r.output}")

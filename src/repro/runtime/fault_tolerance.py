@@ -63,8 +63,7 @@ class FaultTolerantRunner:
                     raise
                 self.log(f"[ft] failure: {e!r} — restoring latest checkpoint "
                          f"(restart {self.restarts}/{self.max_restarts})")
-                self.trainer.ckpt._thread = None  # a crashed async save is void
-                self.trainer.ckpt._error = None
+                self.trainer.ckpt.abandon()  # a crashed async save is void
                 fresh = self.trainer.init_state(key)
                 restored = self.trainer.restore_latest(fresh, data_iter)
                 if restored is None:

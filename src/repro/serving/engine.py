@@ -34,7 +34,17 @@ those steps:
     token is **excluded** from ``output`` and from token throughput — it is
     counted separately in ``stats()["eos_stops"]``);
   * simple FCFS queue with throughput/latency accounting for the benchmark
-    harness (``benchmarks/bench_serving.py``).
+    harness (``benchmarks/bench_serving.py``);
+  * a **resilience layer** (``serving/resilience.py``, docs/resilience.md):
+    a deterministic :class:`~repro.serving.resilience.FaultPlan` threaded
+    through named tick points, per-request **quarantine/retry** with bounded
+    exponential backoff (a fault attributable to one request never kills the
+    batch — the request re-queues and recompute-resumes exactly like a
+    preemption), a **degrade ladder** (prefix splicing off -> all page
+    sharing off -> admissions shed) under persistent faults, a periodic
+    :class:`~repro.serving.resilience.CacheAuditor` invariant sweep, and
+    **serving-state snapshots** (``snapshot_dir=``) from which a killed
+    engine restarts token-exact (:meth:`ServingEngine.from_snapshot`).
 
 Model families without a fused ``prefill_chunk`` but with a cache-style
 serve state (``decode_rollback_safe``, e.g. encdec) fall back to filling the
@@ -55,7 +65,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import PAD_POS
+from repro.runtime.straggler import StragglerDetector
 from repro.serving.kv_cache import PageAllocator, PrefixIndex, pages_for
+from repro.serving.resilience import (
+    CacheAuditor,
+    DegradeLadder,
+    IntegrityError,
+    LoadShedError,
+    ServingFault,
+    export_serving_state,
+    import_serving_state,
+)
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -69,6 +89,9 @@ class Request:
     # filled by the engine:
     output: list = field(default_factory=list)
     stopped_eos: bool = False  # retired by sampling eos_id (not in output)
+    status: str = "queued"  # queued | running | retrying | done | failed
+    retries: int = 0  # quarantine rounds survived so far
+    error: str | None = None  # last fault message (retrying/failed)
     t_submit: float = 0.0
     t_first: float | None = None
     t_done: float | None = None
@@ -104,7 +127,18 @@ class ServingEngine:
                  temperature: float = 0.0, seed: int = 0,
                  prefill_chunk: int = 32, token_budget: int | None = None,
                  page_size: int | None = None, max_pages: int | None = None,
-                 preempt: bool = True, prefix_cache: bool = False):
+                 preempt: bool = True, prefix_cache: bool = False,
+                 fault_plan=None, audit_every: int = 0,
+                 max_retries: int = 2, retry_backoff: int = 1,
+                 snapshot_dir: str | None = None, snapshot_every: int = 0,
+                 straggler: StragglerDetector | None = None):
+        if max_retries < 0 or retry_backoff < 1:
+            raise ValueError(
+                f"need max_retries >= 0 and retry_backoff >= 1, got "
+                f"{max_retries}/{retry_backoff}"
+            )
+        if snapshot_every and snapshot_dir is None:
+            raise ValueError("snapshot_every needs snapshot_dir=")
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         if token_budget is not None and token_budget < 1:
@@ -239,7 +273,32 @@ class ServingEngine:
             "prefill_tokens": 0,
             "preemptions": 0,
             "eos_stops": 0,
+            "faults": 0,
+            "quarantines": 0,
+            "failures": 0,
+            "recoveries": 0,
+            "integrity_errors": 0,
+            "load_shed": 0,
+            "snapshots": 0,
+            "straggler_events": 0,
         }
+
+        # ---- resilience layer (serving/resilience.py) -------------------
+        self.fault_plan = fault_plan
+        self.audit_every = audit_every
+        self.max_retries = max_retries
+        self.retry_backoff = retry_backoff
+        self.snapshot_every = snapshot_every
+        self.ladder = DegradeLadder()
+        self.auditor = CacheAuditor(self)
+        self.straggler = straggler if straggler is not None else StragglerDetector()
+        self._tick = 0
+        if snapshot_dir is not None:
+            from repro.checkpoint.manager import CheckpointManager
+
+            self._ckpt = CheckpointManager(snapshot_dir, keep=2)
+        else:
+            self._ckpt = None
 
     # ------------------------------------------------------------- API
 
@@ -248,7 +307,15 @@ class ServingEngine:
         (``max_len`` dense, ``slot_pages * page_size`` paged); generation
         that would run past capacity is truncated (the request retires at
         the last writable position — no cache write ever lands out of
-        range)."""
+        range).  While the degrade ladder is shedding (persistent faults),
+        raises :class:`~repro.serving.resilience.LoadShedError` instead of
+        queueing work the engine cannot currently take."""
+        if not self.ladder.allow_admission:
+            self.counters["load_shed"] += 1
+            raise LoadShedError(
+                f"admission shed: degrade ladder at {self.ladder.name!r} "
+                f"after {self.counters['faults']} fault(s)"
+            )
         prompt = np.asarray(prompt, np.int32)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -276,20 +343,159 @@ class ServingEngine:
         )
         req._tokens = prompt  # grows to prompt+output on preemption resume
         req._pages = []
+        req._ready_tick = 0  # earliest tick _admit may take it (backoff)
         req.t_submit = time.perf_counter()
         self.queue.append(req)
         return req
 
     def run(self, *, max_steps: int = 10_000):
-        """Drive until queue + slots drain (or max_steps iterations)."""
+        """Drive until queue + slots drain (or max_steps iterations).
+
+        Each iteration is one engine *tick*: admit, prefill, decode — then
+        the resilience bookkeeping.  Faults handled at their site (per-
+        request quarantine) or here (engine-level tick retry) advance the
+        degrade ladder; fault-free ticks cool it back down.  Any tick that
+        saw a fault ends with a cache audit; periodic audits run every
+        ``audit_every`` ticks and periodic snapshots every
+        ``snapshot_every``.  Audit violations restore the latest snapshot
+        (or raise when none exists)."""
         for _ in range(max_steps):
-            self._admit()
-            if all(s is None for s in self.slots) and not self.queue:
-                break
-            if self._chunked:
-                self._prefill_tick()
-            self._decode_once()
+            self._tick += 1
+            t0 = time.perf_counter()
+            faults_before = self.counters["faults"]
+            try:
+                self._admit()
+                if all(s is None for s in self.slots) and not self.queue:
+                    break
+                if self._chunked:
+                    self._prefill_tick()
+                self._decode_once()
+            except ServingFault as e:
+                self._recover(e)
+            if self.counters["faults"] > faults_before:
+                self._post_recovery_audit()
+            else:
+                self.ladder.record_clean(self._tick)
+                if self.audit_every and self._tick % self.audit_every == 0:
+                    try:
+                        self.auditor.check()
+                    except IntegrityError as e:
+                        self._recover(e)
+            if self.straggler.record(self._tick, time.perf_counter() - t0):
+                self.counters["straggler_events"] += 1
+            if (
+                self._ckpt is not None
+                and self.snapshot_every
+                and self._tick % self.snapshot_every == 0
+                and (self.queue or any(s is not None for s in self.slots))
+            ):
+                self.snapshot()
         return self.done
+
+    # ------------------------------------------------- fault handling
+
+    def _fire(self, point, uid=None):
+        """Give the fault plan (when configured) its shot at this tick
+        point; raises :class:`InjectedFault` when the plan schedules one."""
+        if self.fault_plan is not None:
+            self.fault_plan.fire(point, uid=uid)
+
+    def _note_fault(self, err):
+        self.counters["faults"] += 1
+        self.ladder.record_fault(self._tick)
+
+    def _slot_of(self, uid):
+        for i, r in enumerate(self.slots):
+            if r is not None and r.uid == uid:
+                return i
+        return None
+
+    def _requeue(self, req):
+        # Priority = uid order = FCFS: a re-queued request goes back ahead
+        # of anything submitted after it.
+        uids = [r.uid for r in self.queue]
+        self.queue.insert(bisect.bisect_left(uids, req.uid), req)
+
+    def _release_slot(self, i):
+        """Take slot ``i``'s request out of the batch, freeing its pages
+        and retaining prompt + generated tokens for a recompute-style
+        resume (the shared tail of eviction and quarantine)."""
+        req = self.slots[i]
+        if self._paged:
+            self._free_slot_pages(i)
+        self.slots[i] = None
+        self._hold_decode.discard(i)
+        if req.output:
+            req._tokens = np.concatenate(
+                [req.prompt, np.asarray(req.output, np.int32)]
+            )
+        req._filled = 0
+        req._cached = 0
+        req._pages = []
+        return req
+
+    def _register_retry(self, req, err):
+        """Quarantine bookkeeping for a faulted request (in a slot or still
+        queued): bounded exponential backoff, then permanent failure."""
+        self.counters["quarantines"] += 1
+        req.retries += 1
+        req.error = str(err)
+        if req.retries > self.max_retries:
+            req.status = "failed"
+            req.t_done = time.perf_counter()
+            self.done.append(req)
+            self.counters["failures"] += 1
+            return
+        req.status = "retrying"
+        req._ready_tick = self._tick + self.retry_backoff * (
+            2 ** (req.retries - 1)
+        )
+        self._requeue(req)
+
+    def _quarantine_slot(self, i, err):
+        """Per-request failure isolation: pull the faulted request out of
+        its slot (rest of the batch keeps decoding) and schedule its retry."""
+        self._register_retry(self._release_slot(i), err)
+
+    def _recover(self, err):
+        """Engine-level recovery for faults that escape to the run loop.
+
+        Attributable faults quarantine their request; integrity errors
+        restore the latest snapshot; bare engine-level faults cost only the
+        tick (every injection point fires before state mutation, so the
+        serving state stays consistent and the tick simply retries)."""
+        self._note_fault(err)
+        if isinstance(err, IntegrityError):
+            self.counters["integrity_errors"] += 1
+            self._restore_or_raise(err)
+        elif err.uid is not None:
+            i = self._slot_of(err.uid)
+            if i is not None:
+                self._quarantine_slot(i, err)
+            else:
+                for qi, r in enumerate(self.queue):
+                    if r.uid == err.uid:
+                        self.queue.pop(qi)
+                        self._register_retry(r, err)
+                        break
+        self.counters["recoveries"] += 1
+
+    def _post_recovery_audit(self):
+        """Invariant sweep after any tick that recovered from a fault; a
+        violation means recovery itself corrupted state — restore."""
+        v = self.auditor.violations()
+        if v:
+            err = IntegrityError(v)
+            self._note_fault(err)
+            self.counters["integrity_errors"] += 1
+            self._restore_or_raise(err)
+            self.counters["recoveries"] += 1
+
+    def _restore_or_raise(self, err):
+        if self._ckpt is None or self._ckpt.latest_step() is None:
+            raise err
+        self.restore_snapshot()
+        self.auditor.check()  # the restored state must itself be clean
 
     # --------------------------------------------------------- internals
 
@@ -297,52 +503,92 @@ class ServingEngine:
         for i, slot in enumerate(self.slots):
             if slot is not None or not self.queue:
                 continue
-            req = self.queue[0]
-            hit_tokens = 0
-            if self._paged:
-                need = pages_for(len(req._tokens) - 1, self.page_size)
-                hit = None
-                n_hit = 0
-                if self.prefix is not None:
-                    # Reusable prefix among resident pages: only rows the
-                    # prefill would write (tokens[:-1]) can be reused.
-                    hit = self.prefix.lookup(req._tokens[:-1])
-                    n_hit = len(hit.pages)
-                fresh = self._alloc_pages(need - n_hit)
-                if fresh is None:
+            qi = self._next_ready()
+            if qi is None:
+                break
+            req = self.queue[qi]
+            try:
+                self._fire("admit", uid=req.uid)
+                if not self._admit_into(i, qi, req):
                     # Page exhaustion: strict FCFS — later requests wait
                     # behind the head rather than starving it.
                     break
-                if hit is not None:
-                    self.prefix.acquire(hit.pages)
-                    hit_tokens = hit.tokens
-                    if hit.cow_page is not None and hit.cow_keep > 0:
-                        # Divergence inside a resident page: duplicate it
-                        # into this request's first private page and keep
-                        # the shared rows — the resident page stays
-                        # untouched (copy-on-write).
-                        self.state = self._cow_copy(
-                            self.state, hit.cow_page, fresh[0], hit.cow_keep
-                        )
-                        self.prefix.cow_copies += 1
-                req._pages = list(hit.pages if hit else []) + fresh
-                self._bt[i, :] = self.NULL
-                self._bt[i, :need] = req._pages
-                self._bt_dirty = True
-            self.queue.pop(0)
-            self.slots[i] = req
-            self.state = (
-                self._reset_slot_to(self.state, i, hit_tokens)
-                if self._paged else self._reset_slot(self.state, i)
-            )
-            req._filled = hit_tokens  # prompt tokens already in the cache
-            req._cached = hit_tokens  # total cache slots written
-            if not self._chunked:
-                self._prefill_slot_fallback(i, req)
-            elif not self._prefilling(req):
-                # Prompt fully resident (single-token prompt, or a full
-                # prefix-cache hit): straight to decode.
-                req._next_token = int(req._tokens[-1])
+            except ServingFault as e:
+                # Attributable admission fault: the request never entered a
+                # slot (every fire point precedes its mutation, alloc'd
+                # pages are rolled back) — quarantine it and keep admitting.
+                self._note_fault(e)
+                self.queue.pop(qi)
+                self._register_retry(req, e)
+
+    def _next_ready(self):
+        """Queue index of the next admittable request: FCFS over requests
+        whose retry backoff has elapsed, skipping *fresh* requests while
+        the degrade ladder is shedding (retries keep their admission
+        rights — they hold generated progress)."""
+        for qi, req in enumerate(self.queue):
+            if getattr(req, "_ready_tick", 0) > self._tick:
+                continue
+            if not self.ladder.allow_admission and req.retries == 0:
+                continue
+            return qi
+        return None
+
+    def _admit_into(self, i, qi, req) -> bool:
+        """Admit ``req`` (queue position ``qi``) into free slot ``i``;
+        False when the page pool cannot cover it (the caller defers)."""
+        hit_tokens = 0
+        if self._paged:
+            need = pages_for(len(req._tokens) - 1, self.page_size)
+            hit = None
+            n_hit = 0
+            if self.prefix is not None and self.ladder.allow_splice:
+                # Reusable prefix among resident pages: only rows the
+                # prefill would write (tokens[:-1]) can be reused.
+                hit = self.prefix.lookup(req._tokens[:-1])
+                n_hit = len(hit.pages)
+            self._fire("alloc", uid=req.uid)
+            fresh = self._alloc_pages(need - n_hit)
+            if fresh is None:
+                return False
+            cow = hit is not None and hit.cow_page is not None and hit.cow_keep > 0
+            if cow:
+                try:
+                    self._fire("cow", uid=req.uid)
+                except ServingFault:
+                    self.alloc.free(fresh)  # nothing acquired yet — roll back
+                    raise
+            if hit is not None:
+                self.prefix.acquire(hit.pages)
+                hit_tokens = hit.tokens
+                if cow:
+                    # Divergence inside a resident page: duplicate it into
+                    # this request's first private page and keep the shared
+                    # rows — the resident page stays untouched (COW).
+                    self.state = self._cow_copy(
+                        self.state, hit.cow_page, fresh[0], hit.cow_keep
+                    )
+                    self.prefix.cow_copies += 1
+            req._pages = list(hit.pages if hit else []) + fresh
+            self._bt[i, :] = self.NULL
+            self._bt[i, :need] = req._pages
+            self._bt_dirty = True
+        self.queue.pop(qi)
+        self.slots[i] = req
+        req.status = "running"
+        self.state = (
+            self._reset_slot_to(self.state, i, hit_tokens)
+            if self._paged else self._reset_slot(self.state, i)
+        )
+        req._filled = hit_tokens  # prompt tokens already in the cache
+        req._cached = hit_tokens  # total cache slots written
+        if not self._chunked:
+            self._prefill_slot_fallback(i, req)
+        elif not self._prefilling(req):
+            # Prompt fully resident (single-token prompt, or a full
+            # prefix-cache hit): straight to decode.
+            req._next_token = int(req._tokens[-1])
+        return True
 
     def _alloc_pages(self, n):
         """Allocate ``n`` pool pages, evicting unreferenced prefix-index
@@ -405,22 +651,10 @@ class ServingEngine:
         path and resumes decoding where it left off (recompute-style
         preemption: pages are the only thing lost).
         """
-        req = self.slots[i]
+        req = self._release_slot(i)
         self.counters["preemptions"] += 1
-        self._free_slot_pages(i)
-        self.slots[i] = None
-        self._hold_decode.discard(i)
-        if req.output:
-            req._tokens = np.concatenate(
-                [req.prompt, np.asarray(req.output, np.int32)]
-            )
-        req._filled = 0
-        req._cached = 0
-        req._pages = []
-        # Re-queue by priority (uid order = FCFS): an evicted request goes
-        # back ahead of anything submitted after it.
-        uids = [r.uid for r in self.queue]
-        self.queue.insert(bisect.bisect_left(uids, req.uid), req)
+        req.status = "queued"
+        self._requeue(req)
 
     def _pick_victim(self, requester_i):
         """Lowest-priority (newest) occupant, or None if the requester is
@@ -449,6 +683,15 @@ class ServingEngine:
             tbl = req._cached // self.page_size
             if self._bt[i, tbl] != self.NULL:
                 continue
+            try:
+                self._fire("alloc", uid=req.uid)
+            except ServingFault as e:
+                # Growth-allocation fault: quarantine this request (its
+                # output survives — recompute-resume) and keep growing the
+                # rest of the batch.
+                self._note_fault(e)
+                self._quarantine_slot(i, e)
+                continue
             while True:
                 try:
                     page = self.alloc.alloc(1)[0]
@@ -471,7 +714,16 @@ class ServingEngine:
                             "KV page pool exhausted: the remaining request "
                             "alone needs more pages than the pool holds"
                         ) from None
-                    self._evict(victim)
+                    try:
+                        self._fire("evict", uid=self.slots[victim].uid)
+                    except ServingFault as e:
+                        # The eviction itself faulted: quarantine the victim
+                        # (frees its pages through the recovery path, with
+                        # retry bookkeeping) instead of a clean preemption.
+                        self._note_fault(e)
+                        self._quarantine_slot(victim, e)
+                    else:
+                        self._evict(victim)
                     if victim == i:
                         break  # evicted ourselves; skip decode this round
                     continue
@@ -485,6 +737,7 @@ class ServingEngine:
     def _prefill_tick(self):
         """One scheduler iteration's prefill work: split the token budget
         FCFS across prefilling slots and run a single batched chunk step."""
+        self._fire("prefill_tick")
         prefilling = [
             (i, r) for i, r in enumerate(self.slots)
             if r is not None and self._prefilling(r)
@@ -530,7 +783,7 @@ class ServingEngine:
             if not self._prefilling(req):
                 # Last prompt token is fed by the slot's first decode step.
                 req._next_token = int(req._tokens[-1])
-                if self.prefix is not None:
+                if self.prefix is not None and self.ladder.allow_share:
                     # Index this prompt's full pages for future requests.
                     # Already-shared hit pages are skipped (same key).
                     self.prefix.register(
@@ -579,6 +832,7 @@ class ServingEngine:
         return jax.random.categorical(sub, logits / self.temperature).astype(jnp.int32)
 
     def _decode_once(self):
+        self._fire("decode_once")
         hold, self._hold_decode = self._hold_decode, set()
         if self._paged:
             self._grow_pages(hold)
@@ -607,6 +861,16 @@ class ServingEngine:
         now = time.perf_counter()
         for i in active:
             req = self.slots[i]
+            try:
+                self._fire("sample", uid=req.uid)
+            except ServingFault as e:
+                # Sampling fault for this request only: its token this step
+                # is discarded with the slot (greedy decode recomputes it
+                # identically on resume) — the other slots keep their
+                # tokens, the batch never notices.
+                self._note_fault(e)
+                self._quarantine_slot(i, e)
+                continue
             req._cached += 1  # the fed token was written at cache slot len-1
             tok = int(nxt[i])
             if req.t_first is None:
@@ -626,12 +890,96 @@ class ServingEngine:
                 # Either done, or at capacity: the cache is full through its
                 # last writable position and the next decode step would have
                 # nowhere to write its token.
+                req.status = "done"
                 req.t_done = now
                 self.done.append(req)
                 self.slots[i] = None
                 if self._paged:
                     self._free_slot_pages(i)
                     self.alloc.defrag_order()
+
+    # ------------------------------------------------- snapshot / restore
+
+    def snapshot(self) -> int:
+        """Checkpoint the complete serving state under ``snapshot_dir``.
+
+        The device pools (paged K/V + positions + block tables + lengths,
+        or the dense slab) go through :class:`CheckpointManager` (atomic,
+        sharded); all host-side bookkeeping — block tables, allocator free
+        list, prefix-index chain keys/refcounts, scheduler queue, and
+        per-request progress — rides in the manifest's ``extra`` sidecar
+        (docs/resilience.md documents the format).  Returns the step id
+        (the engine tick)."""
+        if self._ckpt is None:
+            raise RuntimeError("snapshot needs snapshot_dir= at construction")
+        self._ckpt.save(
+            self._tick, self.state,
+            extra={"serving": export_serving_state(self)},
+        )
+        self.counters["snapshots"] += 1
+        return self._tick
+
+    def restore_snapshot(self, step: int | None = None) -> int:
+        """Rehydrate this engine from snapshot ``step`` (default latest).
+
+        Device arrays are restored onto their current shardings; host
+        bookkeeping comes from the sidecar.  In-flight requests resume
+        token-exact (deterministic greedy decode over bit-exact restored
+        KV).  Request objects are rebuilt — handles returned by pre-kill
+        ``submit`` calls do not track the restored engine."""
+        if self._ckpt is None:
+            raise RuntimeError("snapshot needs snapshot_dir= at construction")
+        if step is None:
+            step = self._ckpt.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed snapshot under {self._ckpt.dir}"
+                )
+        shardings = jax.tree_util.tree_map(lambda x: x.sharding, self.state)
+        self.state = self._ckpt.restore(step, self.state, shardings=shardings)
+        import_serving_state(self, self._ckpt.manifest(step)["extra"]["serving"])
+        return step
+
+    @classmethod
+    def from_snapshot(cls, bundle, params, snapshot_dir, *, step=None,
+                      **overrides):
+        """Kill-and-restart: rebuild an engine from its serving snapshot.
+
+        Engine construction kwargs come from the snapshot's own config
+        record (``overrides`` win, e.g. to hand the restarted engine a
+        fresh ``fault_plan``); device + host state then restore from the
+        checkpoint, and ``run()`` resumes every in-flight request where
+        the killed engine left it."""
+        from repro.checkpoint.manager import CheckpointManager
+
+        ckpt = CheckpointManager(snapshot_dir)
+        if step is None:
+            step = ckpt.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed snapshot under {snapshot_dir}"
+                )
+        cfg = ckpt.manifest(step)["extra"]["serving"]["config"]
+        kwargs = dict(
+            max_batch=cfg["max_batch"],
+            max_len=cfg["max_len"],
+            temperature=cfg["temperature"],
+            prefill_chunk=cfg["prefill_chunk"],
+            token_budget=cfg["token_budget"],
+            page_size=cfg["page_size"],
+            max_pages=cfg["max_pages"],
+            preempt=cfg["preempt"],
+            prefix_cache=cfg["prefix_cache"],
+            audit_every=cfg["audit_every"],
+            max_retries=cfg["max_retries"],
+            retry_backoff=cfg["retry_backoff"],
+            snapshot_every=cfg["snapshot_every"],
+            snapshot_dir=snapshot_dir,
+        )
+        kwargs.update(overrides)
+        eng = cls(bundle, params, **kwargs)
+        eng.restore_snapshot(step)
+        return eng
 
     # ------------------------------------------------------------ stats
 
@@ -645,6 +993,18 @@ class ServingEngine:
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
             "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
             **self.counters,
+        }
+        out["failed_requests"] = sum(
+            1 for r in self.done if r.status == "failed"
+        )
+        out["degrade"] = {
+            "level": self.ladder.level,
+            "mode": self.ladder.name,
+            "escalations": self.ladder.escalations,
+        }
+        out["step_time"] = {
+            "median_s": self.straggler.median,
+            "straggler_events": len(self.straggler.events),
         }
         if self._paged:
             out["pages"] = self.alloc.utilization()

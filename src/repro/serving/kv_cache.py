@@ -48,6 +48,7 @@ from repro.kernels.flash_attention import PAD_POS
 
 __all__ = [
     "PageAllocator",
+    "PageAllocatorError",
     "PrefixIndex",
     "PrefixHit",
     "init_paged_cache",
@@ -65,6 +66,15 @@ def pages_for(n_tokens: int, page_size: int) -> int:
     """Pages needed to hold ``n_tokens`` cache slots (at least one: a slot
     admitted for decode writes immediately)."""
     return max(1, -(-int(n_tokens) // page_size))
+
+
+class PageAllocatorError(ValueError):
+    """Page bookkeeping corruption: double free or foreign-page free.
+
+    Subclasses ``ValueError`` (the historical type) so existing callers
+    keep working; the distinct type lets the serving resilience layer
+    route allocator corruption into its integrity-recovery path instead
+    of conflating it with ordinary argument errors."""
 
 
 class PageAllocator:
@@ -92,6 +102,11 @@ class PageAllocator:
     def pages_in_use(self) -> int:
         return self.n_pages - len(self._free)
 
+    @property
+    def free_set(self) -> frozenset:
+        """The free pages as a set (read-only view for invariant audits)."""
+        return frozenset(self._free_set)
+
     def alloc(self, n: int) -> list[int]:
         """Allocate ``n`` pages or raise ``MemoryError`` (caller preempts or
         defers admission; nothing is allocated on failure)."""
@@ -105,12 +120,18 @@ class PageAllocator:
         return got
 
     def free(self, pages) -> None:
+        """Return ``pages`` to the pool.  A page outside ``[0, n_pages)``
+        (foreign — never ours to hand out) or already free (double free)
+        raises :class:`PageAllocatorError` with nothing freed up to that
+        point rolled back — corruption is not a state to limp through."""
         for p in pages:
             p = int(p)
             if not 0 <= p < self.n_pages:
-                raise ValueError(f"page {p} out of range [0, {self.n_pages})")
+                raise PageAllocatorError(
+                    f"foreign page {p} out of range [0, {self.n_pages})"
+                )
             if p in self._free_set:
-                raise ValueError(f"double free of page {p}")
+                raise PageAllocatorError(f"double free of page {p}")
             self._free.append(p)
             self._free_set.add(p)
 
@@ -391,6 +412,55 @@ class PrefixIndex:
             "cow_copies": self.cow_copies,
             "evictions": self.evictions,
         }
+
+    # -- snapshot round-trip (serving-state checkpoints) --------------------
+
+    def export_state(self) -> dict:
+        """JSON-safe snapshot of the whole index: chain keys (hex),
+        page ownership, refcounts, per-page tokens, parent links and LRU
+        order.  ``children`` is derivable from ``parent`` and rebuilt on
+        load."""
+        return {
+            "page_size": self.page_size,
+            "pages": [
+                {
+                    "key": key.hex(),
+                    "page": page,
+                    "tokens": list(self._tokens[key]),
+                    "parent": self._parent[key].hex(),
+                    "refs": self._refs[page],
+                    "touch": self._touch.get(key, 0),
+                }
+                for key, page in self._page_of.items()
+            ],
+            "tick": self._tick,
+            "counters": {
+                "hit_tokens": self.hit_tokens,
+                "lookup_tokens": self.lookup_tokens,
+                "cow_copies": self.cow_copies,
+                "evictions": self.evictions,
+            },
+        }
+
+    @classmethod
+    def from_state(cls, blob: dict) -> "PrefixIndex":
+        """Rebuild an index from :meth:`export_state` output."""
+        idx = cls(int(blob["page_size"]))
+        for rec in blob["pages"]:
+            key = bytes.fromhex(rec["key"])
+            parent = bytes.fromhex(rec["parent"])
+            page = int(rec["page"])
+            idx._page_of[key] = page
+            idx._key_of[page] = key
+            idx._refs[page] = int(rec["refs"])
+            idx._tokens[key] = tuple(int(t) for t in rec["tokens"])
+            idx._parent[key] = parent
+            idx._children.setdefault(parent, set()).add(key)
+            idx._touch[key] = int(rec["touch"])
+        idx._tick = int(blob["tick"])
+        for name, value in blob["counters"].items():
+            setattr(idx, name, int(value))
+        return idx
 
 
 # ---------------------------------------------------------------------------

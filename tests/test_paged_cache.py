@@ -21,7 +21,12 @@ from repro.configs import ARCHS
 from repro.core.api import ParallelContext
 from repro.models import build_model
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import PageAllocator, pages_for
+from repro.serving.kv_cache import (
+    PageAllocator,
+    PageAllocatorError,
+    PrefixIndex,
+    pages_for,
+)
 
 from test_serving import GREEDY_TOL, _legacy_step, assert_greedy_chain_matches
 
@@ -61,6 +66,48 @@ def test_page_allocator_alloc_free_high_water():
         a.free([p2[0], p2[0]])
     with pytest.raises(ValueError, match="out of range"):
         a.free([99])
+
+
+def test_page_allocator_typed_corruption_errors():
+    """Double frees and foreign-page frees raise PageAllocatorError — a
+    ValueError subclass (so historical handlers keep working) the serving
+    resilience layer can route into integrity recovery."""
+    assert issubclass(PageAllocatorError, ValueError)
+    a = PageAllocator(2)
+    p = a.alloc(1)
+    a.free(p)
+    with pytest.raises(PageAllocatorError, match="double free"):
+        a.free(p)
+    with pytest.raises(PageAllocatorError, match="foreign"):
+        a.free([7])
+    assert a.free_set == frozenset({0, 1}), "failed frees must not corrupt"
+
+
+def test_prefix_index_snapshot_roundtrip():
+    """export_state/from_state preserve chain keys, refcounts, page tokens,
+    parent links, and LRU order — and the blob is JSON-safe (it rides in
+    the serving snapshot's manifest sidecar)."""
+    import json
+
+    idx = PrefixIndex(4)
+    tokens = list(range(1, 13))  # 3 full pages
+    idx.register(tokens, [10, 11, 12])
+    fork = tokens[:8] + [77, 78, 79, 80]
+    idx.register(fork, [10, 11, 20])
+    idx.release(12)  # refcount 0: evictable, but stays resident
+
+    blob = json.loads(json.dumps(idx.export_state()))
+    back = PrefixIndex.from_state(blob)
+    assert back.pages == idx.pages
+    assert all(back.refcount(p) == idx.refcount(p) for p in idx.pages)
+    hit = back.lookup(tokens)
+    assert hit.pages == [10, 11, 12] and hit.tokens == 12
+    hit = back.lookup(fork)
+    assert hit.pages == [10, 11, 20]
+    # children were rebuilt from parent links: leaf-first eviction still
+    # only reaches the refcount-0 leaf, never a shared interior page
+    assert back.evict(3) == [12]
+    assert back.stats()["hit_tokens"] == idx.stats()["hit_tokens"] + 24
 
 
 def test_page_allocator_defrag_prefers_low_ids():

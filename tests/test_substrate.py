@@ -112,6 +112,52 @@ def test_checkpoint_async(tmp_path):
     assert mgr.latest_step() == 9
 
 
+def test_checkpoint_strays_and_orphan_markers(tmp_path):
+    """latest_step/_gc parse step names strictly and skip what isn't theirs:
+    stray files never crash the int() parse, a marker whose directory is
+    missing (the pre-fix GC crash window) is never offered for restore and
+    is swept, and foreign-looking dirs are left alone."""
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    (tmp_path / "notes.txt").write_text("not a checkpoint")
+    (tmp_path / "weird.COMMITTED").write_text("")  # would crash int() before
+    (tmp_path / "step_nonnumeric").mkdir()  # not ours — must survive GC
+    (tmp_path / "step_000000099.COMMITTED").write_text("")  # orphaned marker
+    assert mgr.latest_step() is None, "an orphan marker must never restore"
+    mgr.save(1, _tree(1))
+    assert mgr.latest_step() == 1
+    assert not (tmp_path / "step_000000099.COMMITTED").exists()
+    assert (tmp_path / "notes.txt").exists()
+    assert (tmp_path / "weird.COMMITTED").exists()
+    assert (tmp_path / "step_nonnumeric").is_dir()
+    # retention GC removes marker *first*, then dir: after it, neither a
+    # committed marker nor the dir of the dropped step may remain
+    mgr.save(2, _tree(2))
+    assert not (tmp_path / "step_000000001").exists()
+    assert not (tmp_path / "step_000000001.COMMITTED").exists()
+    assert mgr.latest_step() == 2
+
+
+def test_checkpoint_abandon_discards_inflight_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr._error = RuntimeError("crashed async writer")
+    mgr.abandon()
+    mgr.wait()  # the abandoned error must not resurface
+    mgr.save(4, _tree(4))
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_bfloat16_restore_bit_exact(tmp_path):
+    """npz round-trips ml_dtypes arrays as raw void bytes; restore must
+    reinterpret (view), not cast — the bf16 serving KV pools depend on it."""
+    mgr = CheckpointManager(str(tmp_path))
+    t = {"kv": jax.random.normal(jax.random.PRNGKey(2), (3, 5)).astype(jnp.bfloat16)}
+    mgr.save(1, t)
+    r = mgr.restore(1, jax.tree.map(jnp.zeros_like, t))
+    np.testing.assert_array_equal(
+        np.asarray(r["kv"]).view(np.uint16), np.asarray(t["kv"]).view(np.uint16)
+    )
+
+
 # ------------------------------------------------------------------ trainer
 
 
