@@ -92,6 +92,7 @@ def measure_wallclock():
     runnable = [
         d.name for d in registered_strategies()
         if ineligible_reason(d, Hq=Hq, Hkv=Hq, P=4, layout="zigzag") is None
+        and d.ring_axes == 1  # two-axis rings need a (pod, inner) mesh
     ]
     for strategy in runnable:
         pctx = ParallelContext(

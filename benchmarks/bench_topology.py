@@ -1,0 +1,112 @@
+"""Modeled flat vs hierarchical 2D ring step time across fabric ratios.
+
+The topology planner (``ParallelContext.plan(topology=...)``) arbitrates
+between the flat bidirectional TokenRing and the hierarchical 2D schedule
+(``core/hier2d.py``) by pricing both against a declared link graph.  This
+benchmark runs that exact arithmetic — no devices, no compilation — over a
+``two_pods(4)`` fabric (P = 8) at inter/intra bandwidth ratios 1x, 4x and
+16x, and cross-checks every number against the link-traffic prover: each
+candidate's schedule is replayed onto the graph (``analysis.topo_check``)
+and must come back finding-free, with the ledger's slowest-wire pass time
+equal to the cost model's ``time_s`` under the same bandwidths.
+
+The per-link byte ledgers (``LinkLedger.to_json()``) are embedded in the
+output so the numbers are auditable offline: per traversed wire, the exact
+forward/backward bytes of one pass and the implied link time.
+
+Results land in ``benchmarks/BENCH_topology.json``.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_topology
+"""
+
+import json
+import os
+
+OUT_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "BENCH_topology.json"
+)
+
+# The acceptance scenario: MHA with heads not divisible by P, bf16 wire.
+B, S, HQ, HKV, D, P = 1, 8192, 4, 4, 128, 8
+BPE, TRAVEL = 2, "float32"
+RATIOS = (1, 4, 16)
+
+
+def bench(out_path=OUT_PATH):
+    import repro.core  # noqa: F401  (registers the strategies)
+    from repro.analysis.comm_audit import AuditDims
+    from repro.analysis.topo_check import check_spec_topology
+    from repro.core.strategies import (
+        get_strategy,
+        itemsize,
+        resolve_strategy,
+        strategy_cost,
+    )
+    from repro.core.topology import DEFAULT_INTRA_BW, two_pods
+
+    dims = AuditDims(
+        B=B, S_loc=S // P, Hq=HQ, Hkv=HKV, D=D,
+        bytes_per_elem=BPE, travel_bytes=itemsize(TRAVEL),
+    )
+    flat_name = resolve_strategy(
+        "auto", P=P, B=B, S=S, Hq=HQ, Hkv=HKV, D=D, bytes_per_elem=BPE
+    )
+    rows = []
+    for ratio in RATIOS:
+        topo = two_pods(
+            P // 2, inter_bw=DEFAULT_INTRA_BW / ratio
+        )
+        row = {
+            "topology": topo.name,
+            "inter_over_intra_slowdown": ratio,
+            "candidates": {},
+        }
+        for name in (flat_name, "tokenring2d"):
+            desc = get_strategy(name)
+            extra = {"n_pods": topo.n_pods} if desc.ring_axes == 2 else {}
+            cost = strategy_cost(
+                desc, B, S, HQ, HKV, D, P,
+                bytes_per_elem=BPE, travel_dtype=TRAVEL, **extra,
+            )
+            if desc.ring_axes == 2:
+                t = cost.time_s(
+                    dict(topo.class_bandwidths()), bidir_links=True
+                )
+            else:
+                t = cost.time_s(
+                    {"link": topo.bottleneck_bw()}, bidir_links=True
+                )
+            spec = desc.schedule_spec(P, S_loc=S // P, **extra)
+            ledger, findings = check_spec_topology(
+                spec, dims, topo, cost=cost, subject=f"{name}@{ratio}x"
+            )
+            assert findings == [], [f.detail for f in findings]
+            row["candidates"][name] = {
+                "modeled_step_time_s": t,
+                "ledger": ledger.to_json(),
+            }
+        ts = {n: c["modeled_step_time_s"] for n, c in row["candidates"].items()}
+        row["chosen"] = min(ts, key=ts.get)
+        row["speedup_2d_over_flat"] = ts[flat_name] / ts["tokenring2d"]
+        rows.append(row)
+        print(
+            f"ratio {ratio:>2}x: {flat_name} {ts[flat_name]:.3e}s  "
+            f"tokenring2d {ts['tokenring2d']:.3e}s  -> {row['chosen']}"
+        )
+    blob = {
+        "shape": {
+            "B": B, "S": S, "Hq": HQ, "Hkv": HKV, "D": D, "P": P,
+            "bytes_per_elem": BPE, "travel_dtype": TRAVEL,
+        },
+        "flat_candidate": flat_name,
+        "rows": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(blob, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return blob
+
+
+if __name__ == "__main__":
+    bench()

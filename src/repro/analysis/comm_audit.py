@@ -27,10 +27,16 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.analysis.report import Finding
-from repro.core.schedule import ScheduleSpec
+from repro.core.schedule import ScheduleSpec, axis_extent, ring_shift_hops
 from repro.core.strategies import SPStrategy, itemsize, strategy_cost
 
-__all__ = ["AuditDims", "buffer_wire_bytes", "audit_schedule", "audit_strategy"]
+__all__ = [
+    "AuditDims",
+    "buffer_wire_bytes",
+    "hop_ledger",
+    "audit_schedule",
+    "audit_strategy",
+]
 
 POS_BYTES = 4  # positions are int32
 LSE_BYTES = 4  # lse is float32
@@ -74,7 +80,7 @@ def buffer_wire_bytes(
     return total
 
 
-def audit_schedule(
+def hop_ledger(
     spec: ScheduleSpec,
     P: int,
     dims: AuditDims,
@@ -82,31 +88,29 @@ def audit_schedule(
     include_positions: bool = False,
     subject: str = "schedule",
 ):
-    """``(fwd_bytes, bwd_bytes, findings)`` for one full schedule pass.
+    """Per-step per-direction byte ledger: ``(steps, findings)``.
 
-    Per-device bytes: SPMD symmetry means every rank sends the same payloads,
-    so one rank's walk is the per-device count the cost models quote.
+    ``steps`` is one record per schedule step: ``{"step": idx, "fwd": bytes,
+    "bwd": bytes, "sends": [...]}`` where each send entry carries the op's
+    buffers, axis tag, shift, hop count, direction, and priced bytes.  This
+    is what lets drift findings cite the *exact step* where a schedule and
+    its cost model diverge, and what ``analysis.topo_check`` replays onto
+    physical links.  Direction/hop convention: ``schedule.ring_shift_hops``
+    on each Send's own ring (the flat P-ring, or its ``axes`` extent).
     """
-    fwd = 0
-    bwd = 0
     findings: list[Finding] = []
     unspeced: set[str] = set()
+    steps: list[dict] = []
     for idx, step in enumerate(spec.schedule.all_steps()):
+        rec = {"step": idx, "fwd": 0, "bwd": 0, "sends": []}
         for op in step.sends:
-            if spec.torus_hops:
-                hops = abs(op.shift)
-                forward = op.shift > 0
-            else:
-                s = op.shift % P
-                if s == 0:
-                    continue  # SCHED-DEADLOCK territory; nothing moves
-                hops = min(s, P - s)
-                if s != P - s:
-                    forward = s < P - s
-                else:
-                    # Both ways are equidistant (P=2, or shift P/2): the
-                    # declared sign is the direction the schedule meant.
-                    forward = op.shift > 0
+            n = axis_extent(spec.axes, op.axis, P)
+            hops, forward = ring_shift_hops(
+                op.shift, n, torus=spec.torus_hops
+            )
+            if hops == 0:
+                continue  # SCHED-DEADLOCK territory; nothing moves
+            op_bytes = 0
             for name in op.buffers:
                 bspec = spec.buffers.get(name)
                 if bspec is None:
@@ -121,13 +125,44 @@ def audit_schedule(
                             )
                         )
                     continue
-                b = hops * buffer_wire_bytes(
+                op_bytes += buffer_wire_bytes(
                     bspec, dims, include_positions=include_positions
                 )
-                if forward:
-                    fwd += b
-                else:
-                    bwd += b
+            b = hops * op_bytes
+            rec["fwd" if forward else "bwd"] += b
+            rec["sends"].append(
+                {
+                    "buffers": list(op.buffers),
+                    "axis": op.axis,
+                    "shift": op.shift,
+                    "hops": hops,
+                    "dir": "fwd" if forward else "bwd",
+                    "bytes": b,
+                }
+            )
+        steps.append(rec)
+    return steps, findings
+
+
+def audit_schedule(
+    spec: ScheduleSpec,
+    P: int,
+    dims: AuditDims,
+    *,
+    include_positions: bool = False,
+    subject: str = "schedule",
+):
+    """``(fwd_bytes, bwd_bytes, findings)`` for one full schedule pass.
+
+    Per-device bytes: SPMD symmetry means every rank sends the same payloads,
+    so one rank's walk is the per-device count the cost models quote.  The
+    per-step breakdown behind these totals is :func:`hop_ledger`.
+    """
+    steps, findings = hop_ledger(
+        spec, P, dims, include_positions=include_positions, subject=subject
+    )
+    fwd = sum(rec["fwd"] for rec in steps)
+    bwd = sum(rec["bwd"] for rec in steps)
     return fwd, bwd, findings
 
 
@@ -162,7 +197,7 @@ def audit_strategy(
         f"{desc.name}[P={P},B={B},S={S},Hq={Hq},Hkv={Hkv},D={D},"
         f"bpe={bytes_per_elem}]"
     )
-    fwd, bwd, findings = audit_schedule(
+    steps, findings = hop_ledger(
         spec, P, dims, include_positions=False, subject=subject
     )
     cost = strategy_cost(
@@ -170,17 +205,19 @@ def audit_strategy(
         bytes_per_elem=bytes_per_elem, travel_dtype=travel_dtype,
         window=window,
     )
-    for direction, got, model in (
-        ("fwd", fwd, cost.fwd_bytes),
-        ("bwd", bwd, cost.bwd_bytes),
-    ):
+    for direction, model in (("fwd", cost.fwd_bytes), ("bwd", cost.bwd_bytes)):
+        got = sum(rec[direction] for rec in steps)
         if got != model:
+            per_step = {
+                rec["step"]: rec[direction] for rec in steps if rec[direction]
+            }
             findings.append(
                 Finding(
                     "COMM-DRIFT",
                     subject,
                     f"{direction}: schedule sends {got} bytes but comm_cost "
-                    f"models {model:.0f} (drift {got - model:+.0f})",
+                    f"models {model:.0f} (drift {got - model:+.0f}); "
+                    f"per-step {direction} bytes: {per_step}",
                 )
             )
     return findings

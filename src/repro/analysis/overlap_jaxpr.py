@@ -127,12 +127,27 @@ def trace_strategy(
     overlap: bool = True,
     block: int = 32,
 ):
-    """Trace a strategy fn device-free under an abstract ring of ``P`` ranks."""
+    """Trace a strategy fn device-free under an abstract ring of ``P`` ranks.
+
+    Hierarchical strategies (``ring_axes == 2``) trace under a two-axis
+    environment factored the same way their registered spec factors ``P``
+    (``core.hier2d.default_pods``), with ``axis_name`` expanded to the
+    ``(pod, inner)`` pair their fn signature takes.
+    """
     import jax
     import jax.numpy as jnp
 
+    if getattr(desc, "ring_axes", 1) == 2:
+        from repro.core.hier2d import default_pods
+
+        n_pods = default_pods(P)
+        axis_env = [(f"{axis_name}_pod", n_pods), (axis_name, P // n_pods)]
+        bound_axis = (axis_env[0][0], axis_env[1][0])
+    else:
+        axis_env = [(axis_name, P)]
+        bound_axis = axis_name
     fn = partial(
-        desc.fn, axis_name=axis_name, causal=causal, window=window,
+        desc.fn, axis_name=bound_axis, causal=causal, window=window,
         impl="xla", block_q=block, block_k=block, overlap=overlap,
     )
     f32, i32 = jnp.float32, jnp.int32
@@ -143,7 +158,7 @@ def trace_strategy(
         jax.ShapeDtypeStruct((B, S_loc), i32),          # q_pos
         jax.ShapeDtypeStruct((B, S_loc), i32),          # k_pos
     )
-    return jax.make_jaxpr(fn, axis_env=[(axis_name, P)])(*args)
+    return jax.make_jaxpr(fn, axis_env=axis_env)(*args)
 
 
 def overlap_findings(desc, *, P: int, window: int | None = None):

@@ -81,6 +81,27 @@ RULES: dict[str, str] = {
         "the sequence length admits no power-of-two tile >= the sublane "
         "minimum (_pick_block would degrade to near-per-row grid steps)"
     ),
+    # topo_check — per-link ledger of a schedule replayed onto a Topology
+    "TOPO-OVERSUBSCRIBED": (
+        "two logical streams (or an uneven share of one stream) land on one "
+        "directed physical lane in one step — the cost model prices lanes "
+        "as dedicated, so the bottleneck lane exceeds the modeled link time"
+    ),
+    "TOPO-HALF-DUPLEX": (
+        "a bidirectional schedule is priced full-duplex over a half-duplex "
+        "link: both directions share one lane and the real link time is the "
+        "sum, not the max, of the per-direction times"
+    ),
+    "TOPO-CROSS-POD": (
+        "inter-pod links carry more bytes than the cost model's inter-class "
+        "declaration — the schedule crosses the slow link every step where "
+        "the pricing assumes once per super-step"
+    ),
+    "TOPO-COST-DRIFT": (
+        "the per-link ledger's pass time (or per-class per-lane bytes) "
+        "disagrees with the registered CommCost evaluated under the same "
+        "topology — the planner would arbitrate on numbers the wires deny"
+    ),
     # overlap_jaxpr — jaxpr-level overlap pre-check
     "OVLP-BLOCKED": (
         "a strategy that declares pipelines=True has a scan-body ppermute "

@@ -42,6 +42,8 @@ from repro.core.schedule import (
     ScheduleError,
     ScheduleSpec,
     Send,
+    axis_extent,
+    message_dst,
 )
 
 __all__ = ["QVal", "KVVal", "Partial", "check_schedule_spec"]
@@ -90,23 +92,30 @@ def _initial_state(spec: ScheduleSpec, P: int) -> list[dict]:
     return state
 
 
-def _structure_findings(schedule: Schedule, subject: str, P: int):
-    """Deadlock + unmatched-send checks (pure step structure, no walk)."""
+def _structure_findings(schedule: Schedule, subject: str, P: int, axes=None):
+    """Deadlock + unmatched-send checks (pure step structure, no walk).
+
+    Each Send is judged on its *own* ring: the flat P-ring, or — for
+    hierarchical schedules whose Sends carry an ``axis`` tag — the extent of
+    that axis under the spec's row-major factorization.
+    """
     findings: list[Finding] = []
     seen: set = set()
     for idx, step in enumerate(schedule.all_steps()):
         send_targets: list[str] = []
         for op in step.sends:
-            if P > 1 and op.shift % P == 0:
-                key = ("deadlock", op.buffers, op.shift)
+            n = axis_extent(axes, op.axis, P)
+            if n > 1 and op.shift % n == 0:
+                key = ("deadlock", op.buffers, op.shift, op.axis)
                 if key not in seen:
                     seen.add(key)
+                    ring = f"P={P}" if op.axis is None else f"axis {op.axis!r}={n}"
                     findings.append(
                         Finding(
                             "SCHED-DEADLOCK",
                             subject,
                             f"step {idx}: Send{op.buffers} has shift "
-                            f"{op.shift} ≡ 0 (mod P={P}) — the payload never "
+                            f"{op.shift} ≡ 0 (mod {ring}) — the payload never "
                             f"leaves its rank and every receive goes unposted",
                         )
                     )
@@ -131,7 +140,7 @@ def _structure_findings(schedule: Schedule, subject: str, P: int):
 def check_schedule_spec(spec: ScheduleSpec, P: int, *, subject: str = "schedule"):
     """All schedule-level findings for ``spec`` on a ring of ``P`` ranks."""
     schedule = spec.schedule
-    findings = _structure_findings(schedule, subject, P)
+    findings = _structure_findings(schedule, subject, P, spec.axes)
 
     initial = {n for n, b in spec.buffers.items() if not b.virtual}
     try:
@@ -156,7 +165,7 @@ def check_schedule_spec(spec: ScheduleSpec, P: int, *, subject: str = "schedule"
         for op in step.ops:
             if isinstance(op, Send):
                 for src in range(P):
-                    dst = (src + op.shift) % P
+                    dst = message_dst(src, op, P, spec.axes)
                     for b, tgt in zip(op.buffers, op.targets):
                         writes[dst][tgt] = state[src][b]
             elif isinstance(op, Compute):

@@ -122,6 +122,10 @@ class ExecutionPlan:
     # SPStrategy.pipelines capability) — False schedules never get a
     # pipelined time below the sequential one.
     pipelines: bool = True
+    # When the plan was arbitrated against a physical Topology
+    # (``plan(topology=...)``): the scored candidates and the winner, so
+    # launchers can record *why* this schedule runs on this fabric.
+    topology_decision: dict | None = None
 
     def modeled_times(
         self,
@@ -252,6 +256,7 @@ class ParallelContext:
         causal: bool = True,
         window: int | None = None,
         scale: float | None = None,
+        topology=None,
     ) -> ExecutionPlan:
         """Validate mesh/axes/layout and resolve the strategy for these
         shapes, returning the uniform :class:`ExecutionPlan`.
@@ -259,6 +264,17 @@ class ParallelContext:
         ``"auto"`` resolves by per-strategy ``comm_cost`` argmin; multi-axis
         meshes get the Case-Study-III hybrid decomposition (inter-pod KV ring
         outside, the resolved strategy inside).
+
+        ``topology`` (a :class:`repro.core.topology.Topology`) arbitrates
+        against the physical graph instead of a single abstract link: the
+        flat resolved ring is priced at the slowest wire its Hamiltonian
+        placement traverses, the hierarchical ``"tokenring2d"`` schedule at
+        its per-class ``CommCost.links`` split over the graph's per-class
+        bandwidths, and the faster plan wins (``ExecutionPlan
+        .topology_decision`` records the scores).  On a pod-structured graph
+        with a slow inter-pod fabric the 2D schedule keeps the per-step
+        query+accumulator stream on intra-pod wires and wins; on a uniform
+        fabric the flat ring's fewer hops win.
         """
         self._validate_axes()
         P_sp = self.sp_degree
@@ -278,6 +294,12 @@ class ParallelContext:
             block_q_bwd=self.block_q_bwd, block_k_bwd=self.block_k_bwd,
             overlap=self.overlap,
         )
+
+        if topology is not None:
+            return self._plan_topology(
+                topology, shapes, B_loc=B_loc, causal=causal, window=window,
+                kw=kw,
+            )
 
         hybrid = len(self.sp_axes) >= 2
         # Eligibility (and cost) for a hybrid plan is judged at the *inner*
@@ -324,7 +346,6 @@ class ParallelContext:
         qspec = P(dp, seq, None, None)
         pspec = P(dp, seq)
         in_specs = (qspec, qspec, qspec, pspec, pspec)
-        extras = self._strategy_kwargs(desc)
 
         if hybrid:
             # Case Study III: inter-pod KV ring outside, `inner` inside.
@@ -377,30 +398,199 @@ class ParallelContext:
                 pipelines=inner_desc.pipelines,
             )
 
+        # Single flat axis (window strategies flatten multi-axis themselves).
+        return self._flat_plan(
+            name, shapes, B_loc=B_loc, causal=causal, window=window, kw=kw
+        )
+
+    def _flat_plan(
+        self,
+        name: str,
+        shapes: AttnShapes,
+        *,
+        B_loc: int,
+        causal: bool,
+        window: int | None,
+        kw: dict,
+        topo_decision: dict | None = None,
+    ) -> ExecutionPlan:
+        """Bind ``name`` as one flat ring over all SP axes jointly."""
+        desc = get_strategy(name)
+        P_sp = self.sp_degree
         why = ineligible_reason(
             desc, Hq=shapes.Hq, Hkv=shapes.Hkv, P=P_sp, layout=self.layout,
             window=window,
         )
         if why is not None:
             raise ValueError(f"strategy {name!r} cannot run this config: {why}")
-
-        # Single flat axis (window strategies flatten multi-axis themselves).
+        extras = self._strategy_kwargs(desc)
         axis_name = self.flat_axis_name
         fn = desc.fn
 
         def local_fn(q, k, v, qp, kp):
             return fn(q, k, v, qp, kp, axis_name=axis_name, **kw, **extras)
 
+        dp = self.data_axis
+        seq = self.seq_spec()
+        qspec = P(dp, seq, None, None)
+        pspec = P(dp, seq)
         cost = strategy_cost(
             desc, B_loc, shapes.Sq, shapes.Hq, shapes.Hkv, shapes.D, P_sp,
             bytes_per_elem=shapes.dtype_bytes, bidir_links=self.bidir_links,
             S_kv=shapes.seq_kv, window=window, **extras,
         )
+        compute_flops = attention_compute_flops(
+            B_loc, shapes.Sq, shapes.Hq, shapes.D, P_sp, S_kv=shapes.seq_kv,
+            causal=causal, window=window if desc.supports_window else None,
+        )
         return ExecutionPlan(
             kind="attention", strategy=name, inner=None, mesh=self.mesh,
-            in_specs=in_specs, out_specs=qspec, local_fn=local_fn,
-            sp_axes=self.sp_axes, sp_degree=P_sp, cost=cost,
-            compute_flops=compute_flops, pipelines=desc.pipelines,
+            in_specs=(qspec, qspec, qspec, pspec, pspec), out_specs=qspec,
+            local_fn=local_fn, sp_axes=self.sp_axes, sp_degree=P_sp,
+            cost=cost, compute_flops=compute_flops, pipelines=desc.pipelines,
+            topology_decision=topo_decision,
+        )
+
+    def _plan_topology(
+        self,
+        topo,
+        shapes: AttnShapes,
+        *,
+        B_loc: int,
+        causal: bool,
+        window: int | None,
+        kw: dict,
+    ) -> ExecutionPlan:
+        """Arbitrate flat-vs-hierarchical against a physical topology graph.
+
+        The flat candidate is priced at the slowest wire its Hamiltonian
+        ``"ring"`` placement traverses (every hop is one physical wire, so
+        the bottleneck link bounds every step); the ``"tokenring2d"``
+        candidate at its declared per-class split (``CommCost.links``) over
+        the graph's per-class bandwidths — the same two numbers
+        ``analysis.topo_check`` certifies against the per-link ledger.
+        """
+        P_sp = self.sp_degree
+        if topo.n_devices != P_sp:
+            raise ValueError(
+                f"topology {topo.name!r} has {topo.n_devices} devices but "
+                f"the mesh's SP degree is {P_sp}"
+            )
+        resolve_kw = dict(
+            B=B_loc, S=shapes.Sq, Hq=shapes.Hq, Hkv=shapes.Hkv, D=shapes.D,
+            bytes_per_elem=shapes.dtype_bytes, S_kv=shapes.seq_kv,
+            bidir_links=self.bidir_links, layout=self.layout, window=window,
+        )
+        half_cls = topo.half_duplex_classes()
+
+        # An explicit non-auto pin bypasses arbitration (never silently run
+        # a different schedule than the one configured); "auto" resolves the
+        # flat candidate by the usual registry argmin first.
+        if self.strategy not in ("auto", "tokenring2d"):
+            flat = self.strategy
+        else:
+            flat = resolve_strategy("auto", P=P_sp, **resolve_kw)
+        flat_desc = get_strategy(flat)
+        flat_cost = strategy_cost(
+            flat_desc, B_loc, shapes.Sq, shapes.Hq, shapes.Hkv, shapes.D,
+            P_sp, bytes_per_elem=shapes.dtype_bytes,
+            bidir_links=self.bidir_links, S_kv=shapes.seq_kv, window=window,
+            **self._strategy_kwargs(flat_desc),
+        )
+        t_flat = flat_cost.time_s(
+            {"link": topo.bottleneck_bw()},
+            bidir_links=self.bidir_links,
+            half_duplex=frozenset({"link"}) if half_cls else frozenset(),
+        )
+        decision = {
+            "topology": topo.name,
+            "bottleneck_bw": topo.bottleneck_bw(),
+            "class_bandwidths": dict(topo.class_bandwidths()),
+            "candidates": {flat: t_flat},
+        }
+
+        hier_desc = get_strategy("tokenring2d")
+        S_loc = shapes.Sq // P_sp
+        eligible_2d = (
+            topo.n_pods > 1
+            and P_sp % topo.n_pods == 0
+            and len(self.sp_axes) == 2
+            and self.mesh.shape[self.sp_axes[0]] == topo.n_pods
+            and S_loc % 2 == 0
+            and window is None
+        )
+        if self.strategy == "tokenring2d" and not eligible_2d:
+            raise ValueError(
+                f"strategy 'tokenring2d' cannot run on {topo.name!r} with "
+                f"sp_axes {self.sp_axes}: needs a podded graph whose pod "
+                f"count equals the first SP axis extent, an even per-rank "
+                f"query split, and no window"
+            )
+        if eligible_2d:
+            hier_cost = strategy_cost(
+                hier_desc, B_loc, shapes.Sq, shapes.Hq, shapes.Hkv, shapes.D,
+                P_sp, bytes_per_elem=shapes.dtype_bytes,
+                bidir_links=self.bidir_links, S_kv=shapes.seq_kv,
+                window=window, n_pods=topo.n_pods,
+                **self._strategy_kwargs(hier_desc),
+            )
+            t_hier = hier_cost.time_s(
+                dict(topo.class_bandwidths()),
+                bidir_links=self.bidir_links, half_duplex=half_cls,
+            )
+            decision["candidates"]["tokenring2d"] = t_hier
+            # an explicit flat pin is never overridden — only "auto" (or an
+            # explicit 2D pin) binds the hierarchical schedule
+            if self.strategy == "tokenring2d" or (
+                self.strategy == "auto" and t_hier < t_flat
+            ):
+                decision["chosen"] = "tokenring2d"
+                return self._hier2d_plan(
+                    shapes, B_loc=B_loc, causal=causal, kw=kw,
+                    cost=hier_cost, decision=decision,
+                )
+        decision["chosen"] = flat
+        return self._flat_plan(
+            flat, shapes, B_loc=B_loc, causal=causal, window=window, kw=kw,
+            topo_decision=decision,
+        )
+
+    def _hier2d_plan(
+        self,
+        shapes: AttnShapes,
+        *,
+        B_loc: int,
+        causal: bool,
+        kw: dict,
+        cost: CommCost,
+        decision: dict,
+    ) -> ExecutionPlan:
+        """Bind the hierarchical 2D TokenRing over ``(pod, inner)`` axes."""
+        desc = get_strategy("tokenring2d")
+        pod_axis, inner_axis = self.sp_axes
+        extras = self._strategy_kwargs(desc)
+        fn = desc.fn
+
+        def local_fn(q, k, v, qp, kp):
+            return fn(
+                q, k, v, qp, kp, axis_name=(pod_axis, inner_axis), **kw,
+                **extras,
+            )
+
+        dp = self.data_axis
+        seq = self.seq_spec()
+        qspec = P(dp, seq, None, None)
+        pspec = P(dp, seq)
+        compute_flops = attention_compute_flops(
+            B_loc, shapes.Sq, shapes.Hq, shapes.D, self.sp_degree,
+            S_kv=shapes.seq_kv, causal=causal,
+        )
+        return ExecutionPlan(
+            kind="attention", strategy="tokenring2d", inner=None,
+            mesh=self.mesh, in_specs=(qspec, qspec, qspec, pspec, pspec),
+            out_specs=qspec, local_fn=local_fn, sp_axes=self.sp_axes,
+            sp_degree=self.sp_degree, cost=cost, compute_flops=compute_flops,
+            pipelines=desc.pipelines, topology_decision=decision,
         )
 
     def _serving_cost(

@@ -64,6 +64,10 @@ __all__ = [
     "ScheduleError",
     "BufferSpec",
     "ScheduleSpec",
+    "axis_extent",
+    "ring_shift_hops",
+    "message_dst",
+    "message_route",
     "step_messages",
     "execute_schedule",
 ]
@@ -76,11 +80,18 @@ class ScheduleError(ValueError):
 @dataclass(frozen=True)
 class Send:
     """Ring-shift ``buffers`` by ``shift``; receive into ``into`` (defaults
-    to the same names, i.e. rotation in place)."""
+    to the same names, i.e. rotation in place).
+
+    ``axis`` names which *logical ring axis* the shift moves on for
+    hierarchical schedules (a ``ScheduleSpec.axes`` tag, e.g. ``"pod"`` /
+    ``"inner"``); ``None`` means the flat ring of all P ranks.  The executor
+    maps the tag to a mesh axis name through its ``axis_name`` mapping.
+    """
 
     buffers: tuple[str, ...]
     shift: int
     into: tuple[str, ...] | None = None
+    axis: str | None = None
 
     @property
     def targets(self) -> tuple[str, ...]:
@@ -277,6 +288,9 @@ class ScheduleSpec:
     shortest-path hops.  ``expected_kv(P, rank)``: the exact set of
     ``(kv_home, kv_part)`` every output must cover — defaults to all parts of
     all ranks (full attention); windowed halo schedules override it.
+    ``axes``: row-major ``((tag, size), ...)`` factorization of the P ranks
+    for hierarchical schedules whose Sends carry axis tags — ``None`` means
+    one flat ring of size P.  The product of sizes must equal P.
     """
 
     schedule: Schedule
@@ -285,6 +299,7 @@ class ScheduleSpec:
     n_kv_parts: int = 1
     torus_hops: bool = False
     expected_kv: Callable[[int, int], frozenset] | None = None
+    axes: tuple[tuple[str, int], ...] | None = None
 
     def expected_coverage(self, P: int, rank: int) -> frozenset:
         if self.expected_kv is not None:
@@ -294,15 +309,105 @@ class ScheduleSpec:
         )
 
 
-def step_messages(step: Step, P: int):
+def axis_extent(
+    axes: tuple[tuple[str, int], ...] | None, axis: str | None, P: int
+) -> int:
+    """Size of the logical ring a Send with tag ``axis`` moves on."""
+    if axis is None or axes is None:
+        if axes is not None:
+            sizes = 1
+            for _, n in axes:
+                sizes *= n
+            if sizes != P:
+                raise ScheduleError(
+                    f"axes {axes} do not factor P={P} (product {sizes})"
+                )
+        return P
+    for tag, n in axes:
+        if tag == axis:
+            return n
+    raise ScheduleError(f"Send axis {axis!r} not in declared axes {axes}")
+
+
+def ring_shift_hops(shift: int, n: int, *, torus: bool = False):
+    """``(hops, forward)`` of one shift on a ring of ``n`` ranks.
+
+    Neighbor convention (matches ``launch.hlo_analysis.analyze_hlo``): a
+    shift ``s`` (mod n) travels ``min(s, n-s)`` hops, forward iff
+    ``s < n - s``; when both ways are equidistant (n=2, or ``s = n/2``) the
+    declared sign decides.  ``torus=True`` prices a distance-``d`` send as
+    ``d`` hops in the direction of its sign (TokenRing Algorithm 1).
+    """
+    if torus:
+        return abs(shift), shift > 0
+    s = shift % n if n > 0 else 0
+    if s == 0:
+        return 0, True
+    hops = min(s, n - s)
+    forward = s < n - s if s != n - s else shift > 0
+    return hops, forward
+
+
+def _rank_coords(rank: int, axes) -> list[int]:
+    coords = []
+    for _, n in reversed(axes):
+        coords.append(rank % n)
+        rank //= n
+    coords.reverse()
+    return coords
+
+
+def _coords_rank(coords, axes) -> int:
+    rank = 0
+    for c, (_, n) in zip(coords, axes):
+        rank = rank * n + c % n
+    return rank
+
+
+def message_dst(src: int, op: Send, P: int, axes=None) -> int:
+    """Destination rank of one Send message: ``(src + shift) % P`` on the
+    flat ring, or the shift applied to ``src``'s coordinate on ``op.axis``
+    under the row-major ``axes`` factorization."""
+    if op.axis is None or axes is None:
+        return (src + op.shift) % P
+    coords = _rank_coords(src, axes)
+    for i, (tag, n) in enumerate(axes):
+        if tag == op.axis:
+            coords[i] = (coords[i] + op.shift) % n
+            return _coords_rank(coords, axes)
+    raise ScheduleError(f"Send axis {op.axis!r} not in declared axes {axes}")
+
+
+def message_route(
+    op: Send, src: int, P: int, axes=None, *, torus_hops: bool = False
+) -> tuple[tuple[int, int], ...]:
+    """The logical neighbor-hop path ``((u, v), ...)`` of one Send message:
+    ``hops`` steps of ±1 along the op's ring, from ``src`` toward the
+    destination (wrapping on that ring).  Physical mapping is the analyzer's
+    job (``analysis.topo_check``) — this is pure logical-ring geometry."""
+    n = axis_extent(axes, op.axis, P)
+    hops, forward = ring_shift_hops(op.shift, n, torus=torus_hops)
+    unit = 1 if forward else -1
+    path = []
+    cur = src
+    one = Send(op.buffers, unit, axis=op.axis)
+    for _ in range(hops):
+        nxt = message_dst(cur, one, P, axes)
+        path.append((cur, nxt))
+        cur = nxt
+    return tuple(path)
+
+
+def step_messages(step: Step, P: int, axes=None):
     """All point-to-point messages of one SPMD step on a ring of ``P`` ranks.
 
     Yields ``(op, src, dst)`` for every Send op and source rank: the payload
-    read on ``src`` lands in ``op.targets`` on ``dst = (src + shift) % P``.
+    read on ``src`` lands in ``op.targets`` on ``dst`` — ``(src + shift) % P``
+    on the flat ring, or the per-axis rotation under ``axes``.
     """
     for op in step.sends:
         for src in range(P):
-            yield op, src, (src + op.shift) % P
+            yield op, src, message_dst(src, op, P, axes)
 
 
 def _default_shift(tree, axis_name, shift):
@@ -328,6 +433,16 @@ def _run_step(
 
     snapshot = bufs  # generation g — never mutated below
 
+    def mesh_axis(op: Send):
+        if isinstance(axis_name, Mapping):
+            try:
+                return axis_name[op.axis]
+            except KeyError:
+                raise ScheduleError(
+                    f"Send axis {op.axis!r} has no mesh axis in {axis_name}"
+                ) from None
+        return axis_name
+
     def run_compute(op: Compute):
         q, q_pos = snapshot[op.q]
         ks, vs, kps = zip(*(snapshot[n] for n in op.kv))
@@ -342,7 +457,7 @@ def _run_step(
         # data path from this step's flash into any transfer.
         for op in step.sends:
             payload = tuple(snapshot[b] for b in op.buffers)
-            received = shift_fn(payload, axis_name, op.shift)
+            received = shift_fn(payload, mesh_axis(op), op.shift)
             writes.update(zip(op.targets, received))
         for op in step.computes:
             writes[op.out] = run_compute(op)
@@ -373,7 +488,7 @@ def _run_step(
                 payload = jax.tree.map(
                     lambda x: x + marker.astype(x.dtype), payload
                 )
-            received = shift_fn(payload, axis_name, op.shift)
+            received = shift_fn(payload, mesh_axis(op), op.shift)
             writes.update(zip(op.targets, received))
 
     out = dict(bufs)
@@ -399,10 +514,12 @@ def execute_schedule(
 
     ``compute_fn(q, q_pos, k, v, k_pos) -> (out, lse)`` is the block-compute
     callback (a flash-attention closure, or a whole inner SP pass for the
-    multi-pod hybrid).  ``shift_fn`` defaults to
-    ``collectives.flat_ring_shift`` and is injectable for device-free IR
-    tests.  ``overlap=False`` serializes comm behind compute (see module
-    docstring) without changing any value.
+    multi-pod hybrid).  ``axis_name`` is a mesh axis name for flat schedules,
+    or a mapping ``{send_axis_tag: mesh_axis_name}`` for hierarchical
+    schedules whose Sends carry axis tags (``core.hier2d``).  ``shift_fn``
+    defaults to ``collectives.flat_ring_shift`` and is injectable for
+    device-free IR tests.  ``overlap=False`` serializes comm behind compute
+    (see module docstring) without changing any value.
     """
     from jax import lax
 

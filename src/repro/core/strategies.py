@@ -35,10 +35,11 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Any, Callable, Mapping
 
 __all__ = [
     "CommCost",
+    "LinkCost",
     "SPStrategy",
     "register_strategy",
     "unregister_strategy",
@@ -64,11 +65,30 @@ KV_RESIDENT_MARGIN = 1.3
 
 
 @dataclass(frozen=True)
+class LinkCost:
+    """Per-device bytes of one pass attributed to one *link class* — the
+    per-class refinement a hierarchical cost model declares so topology-aware
+    pricing can rate each class at its own bandwidth (``cls`` matches
+    ``core.topology.Link.cls``, e.g. ``"intra"`` / ``"inter"``)."""
+
+    cls: str
+    fwd_bytes: float
+    bwd_bytes: float
+
+
+@dataclass(frozen=True)
 class CommCost:
-    """Per-device link bytes of one forward pass, split by ring direction."""
+    """Per-device link bytes of one forward pass, split by ring direction.
+
+    ``links`` optionally refines the scalar totals by link class (see
+    :class:`LinkCost`) for schedules whose hops cross heterogeneous wires —
+    the hierarchical 2D schedule declares ``("intra", "inter")``.  Flat
+    schedules leave it ``None`` and are priced as one implicit class.
+    """
 
     fwd_bytes: float
     bwd_bytes: float
+    links: tuple[LinkCost, ...] | None = None
 
     @property
     def max_direction(self) -> float:
@@ -78,18 +98,48 @@ class CommCost:
     def total(self) -> float:
         return self.fwd_bytes + self.bwd_bytes
 
-    def time_s(self, link_bw: float, *, bidir_links: bool = True) -> float:
-        """Modeled link time: full-duplex fabrics overlap the directions."""
+    def link_costs(self) -> tuple[LinkCost, ...]:
+        """The per-class breakdown, synthesizing one implicit class for flat
+        cost models so every consumer can iterate uniformly."""
+        if self.links is not None:
+            return self.links
+        return (LinkCost("link", self.fwd_bytes, self.bwd_bytes),)
+
+    def time_s(
+        self,
+        link_bw,
+        *,
+        bidir_links: bool = True,
+        half_duplex: frozenset = frozenset(),
+    ) -> float:
+        """Modeled link time: full-duplex fabrics overlap the directions.
+
+        ``link_bw`` is a single bytes/s number (every class rated alike) or a
+        mapping ``{cls: bytes/s}`` — then the time is the **max over the
+        per-class ledger**, each class at its own bandwidth, with classes in
+        ``half_duplex`` summing their directions instead of overlapping them
+        (their two directions share one physical lane).
+        """
+        if isinstance(link_bw, Mapping):
+            def lane(lc: LinkCost) -> float:
+                both = (not bidir_links) or lc.cls in half_duplex
+                b = lc.fwd_bytes + lc.bwd_bytes if both else max(
+                    lc.fwd_bytes, lc.bwd_bytes
+                )
+                return b / link_bw[lc.cls] if b else 0.0
+
+            return max(lane(lc) for lc in self.link_costs())
         bytes_ = self.max_direction if bidir_links else self.total
         return bytes_ / link_bw
 
     def step_time_s(
         self,
-        link_bw: float,
+        link_bw,
         compute_s: float,
         *,
         bidir_links: bool = True,
         pipelined: bool = True,
+        half_duplex: frozenset = frozenset(),
     ) -> float:
         """Modeled wall time of one whole pass of the schedule.
 
@@ -98,8 +148,12 @@ class CommCost:
         costs ``max(compute, link)`` — comm hides under compute (or vice
         versa).  ``pipelined=False`` models the legacy merge→rotate chain,
         where every transfer waits for the step's flash: ``compute + link``.
+        ``link_bw`` generalizes to a per-class mapping exactly as in
+        :meth:`time_s`.
         """
-        link = self.time_s(link_bw, bidir_links=bidir_links)
+        link = self.time_s(
+            link_bw, bidir_links=bidir_links, half_duplex=half_duplex
+        )
         return max(compute_s, link) if pipelined else compute_s + link
 
 
@@ -142,6 +196,13 @@ class SPStrategy:
     # ``sp_attention``.  Their comm_cost models still live here so the planner
     # prices serving schedules with the same machinery as training schedules.
     serving_side: bool = False
+    # How many logical ring axes the schedule rotates on.  1 = the flat SP
+    # ring every strategy above uses (fn takes one ``axis_name``).  2 = a
+    # hierarchical (pod, inner) schedule: fn takes ``axis_name`` as a
+    # ``(pod_axis, inner_axis)`` pair and is planned through
+    # ``ParallelContext.plan(topology=...)``, never through the single-axis
+    # auto pool (``ineligible_reason`` rejects it there).
+    ring_axes: int = 1
     extra_kwargs: frozenset[str] = frozenset()
     # Optional rank-symbolic walk hook: ``schedule_spec(P, **dims) ->
     # core.schedule.ScheduleSpec`` returning the concrete step schedule plus
@@ -200,6 +261,7 @@ def _ensure_builtins() -> None:
         return
     _BUILTINS_LOADED = True
     import repro.core.decode  # noqa: F401  (serving: "decode" + "prefill")
+    import repro.core.hier2d  # noqa: F401  ("tokenring2d")
     import repro.core.prefill_rings  # noqa: F401  ("passkv_ring" + "passq_ring")
     import repro.core.ring_attention  # noqa: F401
     import repro.core.token_ring  # noqa: F401
@@ -246,6 +308,12 @@ def ineligible_reason(
         return (
             "serving-side schedule (replicated Q vs resident sharded cache); "
             "plan via plan_decode/plan_prefill, not sp_attention"
+        )
+    if desc.ring_axes != 1:
+        return (
+            f"hierarchical schedule over {desc.ring_axes} ring axes; needs a "
+            f"(pod, inner) mesh and is planned via "
+            f"ParallelContext.plan(topology=...), not the flat-axis pool"
         )
     if window is not None and not desc.supports_window:
         return "does not implement sliding-window attention"

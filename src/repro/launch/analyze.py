@@ -10,7 +10,11 @@ representative shape grid, entirely without devices or compilation:
   * kernel lint     — VMEM footprint, grid coverage, tile divisibility and
     tile-skip soundness for representative ``FlashConfig``s and layouts;
   * overlap pre-check — jaxpr-level taint pass proving scan-body ppermutes
-    do not data-depend on same-step dot_generals (``pipelines=True`` claim).
+    do not data-depend on same-step dot_generals (``pipelines=True`` claim);
+  * topology check   — per-link traffic prover (``analysis.topo_check``):
+    every schedule replayed onto sample fabrics (flat NVLink pods, a
+    two-pod PCIe-bridged grid, a half-duplex pod), demanding the per-link
+    ledger matches the registered cost model under the graph's bandwidths.
 
 Exit status 0 when clean; with ``--fail-on-findings``, 1 when any pass
 reports a finding.  Rule catalog: ``repro.analysis.report.RULES`` and
@@ -129,7 +133,31 @@ def analyze_overlap(report: Report, descs) -> None:
             report.note_checked("overlap")
 
 
-def run_analysis(names=None, passes=("schedule", "comm", "kernel", "overlap")):
+def analyze_topology(report: Report, descs) -> None:
+    from repro.analysis.topo_check import check_strategy_topology
+    from repro.core.topology import half_duplex_pod, nvlink_pod, two_pods
+
+    topos = (nvlink_pod(4), nvlink_pod(8), two_pods(4), half_duplex_pod(8))
+    for desc in descs:
+        if desc.schedule_spec is None:
+            continue
+        for topo in topos:
+            for Hq, Hkv in GRID_HEADS:
+                for bpe, travel in GRID_WIRE:
+                    findings = check_strategy_topology(
+                        desc, topo, B=B, S_loc=S_LOC, Hq=Hq, Hkv=Hkv, D=D,
+                        bytes_per_elem=bpe, travel_dtype=travel,
+                        window=WINDOW,
+                    )
+                    if findings is None:
+                        continue
+                    report.extend(findings)
+                    report.note_checked("topo")
+
+
+def run_analysis(
+    names=None, passes=("schedule", "comm", "kernel", "overlap", "topo")
+):
     """All passes over the registered strategies; returns the ``Report``."""
     report = Report()
     descs = _strategies(names)
@@ -141,6 +169,8 @@ def run_analysis(names=None, passes=("schedule", "comm", "kernel", "overlap")):
         analyze_kernels(report)
     if "overlap" in passes:
         analyze_overlap(report, descs)
+    if "topo" in passes:
+        analyze_topology(report, descs)
     return report
 
 
@@ -153,7 +183,7 @@ def main(argv=None) -> int:
                     help="analyze every registered strategy (default)")
     ap.add_argument("--strategy", action="append", default=None,
                     help="restrict to one strategy (repeatable)")
-    ap.add_argument("--passes", default="schedule,comm,kernel,overlap",
+    ap.add_argument("--passes", default="schedule,comm,kernel,overlap,topo",
                     help="comma-separated subset of passes to run")
     ap.add_argument("--json", action="store_true",
                     help="machine-readable findings on stdout")

@@ -263,6 +263,27 @@ def run_cell(arch, shape_name, *, multi_pod, strategy, out_dir, force=False,
                     )
                     for r in (0.0, 0.5, 0.95)
                 }
+            if (
+                len(pctx.sp_axes) == 2
+                and mesh.shape[pctx.sp_axes[0]] == 2
+            ):
+                # Graph-aware arbitration record: the same cell planned
+                # against a two-pod topology (NVLink-class wires inside,
+                # 4x slower between) — flat ring at the bottleneck wire vs
+                # hierarchical 2D at its per-class split, with the scored
+                # candidates (core/topology.py, plan(topology=...)).
+                from repro.core.topology import two_pods
+
+                tplan = pctx.plan(
+                    AttnShapes(
+                        B=shape.global_batch, Sq=shape.seq_len,
+                        Hq=cfg.n_heads, Hkv=cfg.n_kv_heads, D=cfg.head_dim,
+                        dtype_bytes=jnp.dtype(cfg.dtype).itemsize,
+                    ),
+                    causal=cfg.causal, window=cfg.window,
+                    topology=two_pods(pctx.sp_degree // 2),
+                )
+                plan_info["topology"] = tplan.topology_decision
         except ValueError as e:
             plan_info = {"error": str(e)}
     elif kind == "decode" and pctx.active and cfg.family in ("dense", "moe", "vlm"):

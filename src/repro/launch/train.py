@@ -44,12 +44,14 @@ def main(argv=None):
     ap.add_argument(
         "--strategy", default="tokenring",
         # window-only strategies need a window= the full-attention layers of
-        # a training run never pass, and serving-side schedules (decode /
-        # prefill) only run against a resident cache; don't advertise either
+        # a training run never pass, serving-side schedules (decode /
+        # prefill) only run against a resident cache, and two-axis rings are
+        # planned via plan(topology=...); don't advertise any of them
         choices=["auto"] + [
             n for n in available_strategies()
             if not get_strategy(n).requires_window
             and not get_strategy(n).serving_side
+            and get_strategy(n).ring_axes == 1
         ],
     )
     ap.add_argument(

@@ -30,6 +30,12 @@ from repro.analysis.preconditions import (
 )
 from repro.analysis.report import RULES, Finding, Report
 from repro.analysis.schedule_check import check_schedule_spec
+from repro.analysis.topo_check import (
+    build_ledger,
+    check_spec_topology,
+    check_strategy_topology,
+)
+from repro.core.hier2d import hier2d_comm_cost, hier2d_spec
 from repro.core.prefill_rings import passkv_ring_spec, passq_ring_spec
 from repro.core.ring_attention import ring_bidir_spec, ring_spec
 from repro.core.schedule import (
@@ -41,6 +47,7 @@ from repro.core.schedule import (
 )
 from repro.core.strategies import available_strategies, get_strategy
 from repro.core.token_ring import token_ring_bidir_spec, token_ring_faithful_spec
+from repro.core.topology import half_duplex_pod, nvlink_pod, two_pods
 from repro.core.window import window_spec
 from repro.core.zigzag import zigzag_positions
 from repro.kernels.ops import FlashConfig
@@ -402,6 +409,161 @@ def test_overlap_findings_flag_blocked_pipeline():
 
 
 # ---------------------------------------------------------------------------
+# topology link-traffic prover (analysis.topo_check)
+# ---------------------------------------------------------------------------
+
+
+TOPOS = (nvlink_pod(4), nvlink_pod(8), two_pods(4), half_duplex_pod(8))
+
+
+@pytest.mark.parametrize("name", sorted(available_strategies()))
+@pytest.mark.parametrize("topo", TOPOS, ids=lambda t: t.name)
+def test_registered_strategies_topo_clean(name, topo):
+    """Honest per-link pricing (the CI default): every shipped schedule's
+    ledger matches its registered cost model on every sample fabric."""
+    findings = check_strategy_topology(
+        get_strategy(name), topo, B=2, S_loc=64, Hq=8, Hkv=2, D=64,
+        bytes_per_elem=2, travel_dtype="bfloat16", window=96,
+    )
+    if findings is None:
+        pytest.skip("no schedule_spec declared")
+    assert findings == []
+
+
+def test_topo_oversubscribed_two_device_ring():
+    # P=2: the +1 and -1 co-rotations from one rank land on the *same*
+    # directed lane of the single wire — two logical streams the cost model
+    # prices as parallel dedicated lanes.
+    _, findings = check_spec_topology(
+        token_ring_bidir_spec(2), DIMS, nvlink_pod(2), subject="p2",
+    )
+    assert findings and {f.rule for f in findings} == {"TOPO-OVERSUBSCRIBED"}
+
+
+def test_topo_half_duplex_claim_caught():
+    # pricing a half-duplex fabric as full-duplex doubles the claimed link
+    # rate; the honest per-link default is clean on the same graph.
+    topo = half_duplex_pod(8)
+    spec = token_ring_bidir_spec(8)
+    _, findings = check_spec_topology(
+        spec, DIMS, topo, assume_bidir=True, subject="hd"
+    )
+    assert findings and {f.rule for f in findings} == {"TOPO-HALF-DUPLEX"}
+    _, honest = check_spec_topology(spec, DIMS, topo, subject="hd")
+    assert honest == []
+
+
+def _hier2d_cost_p8():
+    return hier2d_comm_cost(
+        DIMS.B, DIMS.S_loc * 8, DIMS.Hq, DIMS.Hkv, DIMS.D, 8,
+        bytes_per_elem=DIMS.bytes_per_elem, travel_dtype="float32", n_pods=2,
+    )
+
+
+def test_topo_cross_pod_extra_kv_exchange():
+    # mutation: the pod KV exchange also rides the *final* super-step — the
+    # inter-pod wires carry one K/V more than the cost model declares, and
+    # the finding cites the extra step.
+    spec = hier2d_spec(8, n_pods=2)
+    steps = list(spec.schedule.prologue)
+    half = len(steps) // 2  # first step of the final super-step
+    pod_send = Send(("kv0",), 1, into=("kv1",), axis="pod")
+    steps[half] = Step(pod_send, *steps[half].ops)
+    mut = replace(spec, schedule=Schedule(prologue=tuple(steps)))
+    _, findings = check_spec_topology(
+        mut, DIMS, two_pods(4), cost=_hier2d_cost_p8(), subject="xpod"
+    )
+    rules = {f.rule for f in findings}
+    assert "TOPO-CROSS-POD" in rules
+    detail = next(f for f in findings if f.rule == "TOPO-CROSS-POD").detail
+    assert f"steps [0, {half}]" in detail
+
+
+def test_topo_cost_drift_on_underdeclared_intra_bytes():
+    # mutation: the registered cost under-declares the intra-pod forward
+    # bytes by half — byte-exact drift on the intra class, no CROSS-POD
+    # story (the inter declaration is untouched).
+    cost = _hier2d_cost_p8()
+    intra, inter = cost.links
+    lied = replace(
+        cost,
+        links=(replace(intra, fwd_bytes=intra.fwd_bytes / 2), inter),
+    )
+    _, findings = check_spec_topology(
+        hier2d_spec(8, n_pods=2), DIMS, two_pods(4), cost=lied,
+        subject="drift",
+    )
+    rules = {f.rule for f in findings}
+    assert "TOPO-COST-DRIFT" in rules and "TOPO-CROSS-POD" not in rules
+
+
+def test_topo_ledger_matches_symbolic_audit():
+    # third independent derivation: on the row-major grid placement every
+    # logical hop maps to exactly one wire, so the ledger's lane sums are
+    # P x the per-rank symbolic audit, per logical direction.
+    spec = hier2d_spec(8, n_pods=2)
+    fwd, bwd, findings = audit_schedule(spec, 8, DIMS)
+    assert findings == []
+    dirs = build_ledger(spec, DIMS, two_pods(4)).lane_dir_totals()
+    led_f = sum(d["fwd"] for d in dirs.values())
+    led_b = sum(d["bwd"] for d in dirs.values())
+    assert (led_f, led_b) == (8 * fwd, 8 * bwd)
+
+
+def test_topo_ledger_json_roundtrip_fields():
+    ledger, findings = check_spec_topology(
+        token_ring_bidir_spec(4), DIMS, nvlink_pod(4), subject="json"
+    )
+    assert findings == []
+    blob = ledger.to_json()
+    assert blob["topology"] == "nvlink_pod(4)"
+    assert len(blob["links"]) == 4 and blob["pass_time_s"] > 0
+    assert all(l["fwd_bytes"] == l["bwd_bytes"] > 0 for l in blob["links"])
+
+
+def test_topology_graph_queries():
+    topo = two_pods(4)
+    assert topo.n_devices == 8 and topo.n_pods == 2
+    assert topo.placement("ring") == (0, 1, 2, 3, 7, 6, 5, 4)
+    assert topo.placement("grid") == tuple(range(8))
+    # inter-pod hop is one wire; intra ring routes stay inside the pod
+    assert topo.route(1, 5) == ((1, 5),)
+    assert topo.class_bandwidths()["inter"] < topo.class_bandwidths()["intra"]
+    assert topo.bottleneck_bw() == topo.class_bandwidths()["inter"]
+    assert half_duplex_pod(4).half_duplex_classes() == frozenset({"intra"})
+
+
+def test_topology_arbitration_prefers_2d_on_slow_inter():
+    """The planner arithmetic `plan(topology=...)` runs: flat bidirectional
+    TokenRing priced at the graph bottleneck vs the 2D schedule priced
+    per class — 2D wins exactly when the inter-pod wires are >= 4x slower."""
+    from repro.core.strategies import resolve_strategy
+    from repro.core.topology import DEFAULT_INTRA_BW
+
+    B, S, Hq, Hkv, D, P = 1, 8192, 4, 4, 128, 8
+    picks = {}
+    for ratio in (1, 4, 16):
+        topo = two_pods(P // 2, inter_bw=DEFAULT_INTRA_BW / ratio)
+        name = resolve_strategy(
+            "auto", P=P, B=B, S=S, Hq=Hq, Hkv=Hkv, D=D, bytes_per_elem=2
+        )
+        flat = get_strategy(name).comm_cost(
+            B, S, Hq, Hkv, D, P, bytes_per_elem=2
+        )
+        t_flat = flat.time_s(
+            {"link": topo.bottleneck_bw()}, bidir_links=True
+        )
+        hier = get_strategy("tokenring2d").comm_cost(
+            B, S, Hq, Hkv, D, P, bytes_per_elem=2, n_pods=topo.n_pods
+        )
+        t_hier = hier.time_s(
+            dict(topo.class_bandwidths()), bidir_links=True
+        )
+        picks[ratio] = "tokenring2d" if t_hier < t_flat else name
+    assert picks == {1: "tokenring", 4: "tokenring2d", 16: "tokenring2d"}
+
+
+# ---------------------------------------------------------------------------
 # the CLI gate
 # ---------------------------------------------------------------------------
 
@@ -416,3 +578,6 @@ def test_analyze_cli_clean_and_fails_on_findings(capsys):
 
     report = run_analysis(passes=("schedule",))
     assert report.ok and report.checked["schedule"] > 0
+
+    report = run_analysis(passes=("topo",))
+    assert report.ok and report.checked["topo"] > 0
