@@ -13,7 +13,11 @@ reported here is what the TPU kernels execute.)
     (bwd sweeps block sizes x causal/zigzag x GQA),
   * ``tile_skip``: computed/total backward tiles for zigzag-causal vs
     no-skip, window pruning, and the headline ``zigzag_over_noskip`` ratio
-    (acceptance: <= ~0.6).
+    (acceptance: <= ~0.6),
+  * ``decode``: paged decode at 4k/32k contexts — fused kernel vs the
+    dense-gather path, wall/token plus the exact peak-buffer column (the
+    gather's materialized view vs the kernel's context-length-independent
+    per-step blocks).
 """
 
 import json
@@ -123,6 +127,73 @@ def _bench_backward(rng):
     return rows, recs
 
 
+def _bench_decode(rng):
+    """Paged decode: fused kernel vs the dense-gather path at 4k/32k.
+
+    Wall/token on CPU compares an interpret-mode Pallas kernel against real
+    XLA gathers — a schedule check, not TPU performance (the interpret rows
+    use n=1).  The *peak-buffer* column is the structural point and is exact
+    from the declared shapes: the gather path materializes the slot's full
+    ``(B, W*page_size, Hkv, D)`` K and V views; the fused kernel's largest
+    live buffer is one double-buffered page block + the ``(group, D)``
+    accumulators (``kernel_buffer_shapes("paged_decode")``), independent of
+    context length.
+    """
+    from repro.analysis.kernel_lint import vmem_estimate
+    from repro.kernels.ops import paged_decode_attention
+    from repro.serving.kv_cache import PAD_POS
+
+    rows, recs = [], []
+    B, Hq, Hkv, D, ps, slack = 2, 8, 2, 64, 128, 8
+    for S in (4096, 32768):
+        used = -(-S // ps)
+        W = used + slack
+        n_pages = B * W + 1
+        q = jnp.asarray(rng.standard_normal((B, 1, Hq, D)), jnp.float32)
+        k_pool = jnp.asarray(
+            rng.standard_normal((n_pages, ps, Hkv, D)), jnp.float32
+        )
+        pos = np.full((n_pages, ps), PAD_POS, np.int32)
+        bt = np.full((B, W), n_pages, np.int32)
+        pg = 0
+        for b in range(B):
+            for ip in range(used):
+                bt[b, ip] = pg
+                pos[pg] = np.arange(ip * ps, (ip + 1) * ps)
+                pg += 1
+        bt, pos = jnp.asarray(bt), jnp.asarray(pos)
+        qp = jnp.full((B, 1), S - 1, jnp.int32)
+        lens = jnp.full((B,), S, jnp.int32)
+        itemsize = q.dtype.itemsize
+        peak = {
+            # K and V views, materialized every step, plus the int32 pos view
+            "xla": B * W * ps * (2 * Hkv * D * itemsize + 4),
+            # double-buffered per-grid-step blocks + scratch, page-count free
+            "pallas_interpret": vmem_estimate(
+                "paged_decode", block_q=Hq // Hkv, block_k=ps, D=D,
+                data_bytes=itemsize,
+            ),
+        }
+        for impl, n in (("xla", 5), ("pallas_interpret", 1)):
+            fn = jax.jit(
+                lambda q, impl=impl: paged_decode_attention(
+                    q, k_pool, k_pool, pos, bt, qp, lengths=lens, impl=impl
+                )[0]
+            )
+            dt = _time(fn, q, n=n)
+            path = "gather" if impl == "xla" else "fused"
+            tag = f"paged_decode/{path}/S{S}"
+            print(f"| {tag} | {dt*1e3:.1f} ms/token | "
+                  f"peak buffer {peak[impl]/2**20:.2f} MiB |")
+            rows.append((tag, dt * 1e6, f"{peak[impl]/2**20:.2f}MiB"))
+            recs.append(dict(
+                name=tag, path=path, impl=impl, B=B, S=S, Hq=Hq, Hkv=Hkv,
+                D=D, page_size=ps, pages_used=used, table_width=W,
+                ms_per_token=dt * 1e3, peak_buffer_bytes=peak[impl],
+            ))
+    return rows, recs
+
+
 def _tile_skip_record():
     """Exact backward block-compute counts (the acceptance numbers)."""
     S, P, blk = 8192, 4, 256
@@ -160,6 +231,8 @@ def run(json_path=DEFAULT_JSON):
     rows += fwd_rows
     bwd_rows, bwd_recs = _bench_backward(rng)
     rows += bwd_rows
+    dec_rows, dec_recs = _bench_decode(rng)
+    rows += dec_rows
     tile_skip = _tile_skip_record()
 
     # merge throughput (the Update() of the paper)
@@ -176,6 +249,7 @@ def run(json_path=DEFAULT_JSON):
             "backend": jax.default_backend(),
             "fwd": fwd_recs,
             "bwd": bwd_recs,
+            "decode": dec_recs,
             "tile_skip": tile_skip,
             "merge_partials_ms": dt * 1e3,
         }

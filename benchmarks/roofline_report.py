@@ -110,6 +110,38 @@ def backward_flop_byte_table(block_sizes=(128, 256, 512), dtype_bytes=2):
     return "\n".join(lines)
 
 
+def paged_decode_bytes_table(
+    contexts=(4096, 32768), page_size=128, dtype_bytes=2, Hkv=8, D=128,
+    slack_pages=8,
+):
+    """Per-token HBM traffic of the two paged-decode paths (docs/kernels.md).
+
+    The gather path materializes the slot's full logical view — every
+    block-table slot, mapped or not — and then flash re-reads it:
+    ``3 * W * page_size * Hkv * D * b`` per token per layer (write + 2
+    dtype reads; positions ride along in int32).  The fused kernel streams
+    only the mapped pages once: ``2 * used_pages * page_size * Hkv * D * b``.
+    ``slack_pages`` models the table headroom a serving slot keeps mapped
+    above its current length (the gather pays for it, the kernel does not).
+    """
+    lines = [
+        "| context | pages used | gather view B/token | fused kernel B/token "
+        "| ratio |",
+        "|---|---|---|---|---|",
+    ]
+    for S in contexts:
+        used = -(-S // page_size)
+        W = used + slack_pages
+        kv = page_size * Hkv * D * dtype_bytes
+        gather = 3 * W * kv
+        fused = 2 * used * kv
+        lines.append(
+            f"| {S} | {used} | {gather/1e6:.1f} MB | {fused/1e6:.1f} MB | "
+            f"{gather/fused:.2f}x |"
+        )
+    return "\n".join(lines)
+
+
 def main():
     from repro.configs import ASSIGNED
 
@@ -120,6 +152,9 @@ def main():
     print(dryrun_table(recs, ASSIGNED))
     print("\n## Attention kernel intensity (fwd vs bwd, bf16)\n")
     print(backward_flop_byte_table())
+    print("\n## Paged decode: pages-touched vs materialized-view bytes "
+          "(per layer, bf16)\n")
+    print(paged_decode_bytes_table())
     recs_mp = load(mesh="multipod")
     ok = sum(1 for r in recs_mp.values() if r["status"] == "ok")
     sk = sum(1 for r in recs_mp.values() if r["status"] == "skipped")

@@ -32,6 +32,10 @@ __all__ = [
     "grid_findings",
     "tile_skip_findings",
     "lint_flash_config",
+    "paged_vmem_findings",
+    "paged_bounds_findings",
+    "paged_sentinel_findings",
+    "lint_paged_decode_config",
 ]
 
 # Per-core VMEM on current TPU generations (the budget pallas kernels must
@@ -173,6 +177,175 @@ def tile_skip_findings(
                             f"visible (query, key) pairs",
                         )
                     )
+    return findings
+
+
+def paged_vmem_findings(
+    *,
+    group: int,
+    page_size: int,
+    D: int,
+    data_bytes: int,
+    subject: str,
+    budget: int = VMEM_BUDGET_BYTES,
+):
+    """KERN-VMEM for the fused paged-decode kernel.
+
+    Its per-grid-step working set streams the whole GQA query group against
+    one pool page — ``block_q`` maps to the group width, ``block_k`` to the
+    page size — and the scratch is the ``(group, D)`` float32 accumulator
+    plus two lane-replicated ``(group, MXU_LANE)`` m/l rows.
+    """
+    est = vmem_estimate(
+        "paged_decode", block_q=group, block_k=page_size, D=D,
+        data_bytes=data_bytes,
+    )
+    if est <= budget:
+        return []
+    return [
+        Finding(
+            "KERN-VMEM",
+            subject,
+            f"paged_decode kernel at group={group}, page_size={page_size}, "
+            f"D={D}, {data_bytes}-byte data needs ~{est / 2**20:.1f} MiB "
+            f"VMEM (budget {budget / 2**20:.0f} MiB)",
+        )
+    ]
+
+
+def paged_bounds_findings(block_tables, *, n_pages: int, subject: str):
+    """KERN-PAGED-BOUNDS: every prefetch address the kernel's own index-map
+    clamp produces must land inside the pool.
+
+    The BlockSpec index maps address the page pool straight from the
+    scalar-prefetched block table; an out-of-pool index is an out-of-bounds
+    DMA.  This evaluates ``page_index_clamp`` — the exact function the index
+    maps call — over a concrete table that includes the unmapped sentinel
+    (``n_pages``) and any corrupt entries the caller wants to probe.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.paged_attention import page_index_clamp
+
+    bt = np.asarray(block_tables)
+    clamped = np.asarray(page_index_clamp(jnp.asarray(bt), n_pages))
+    bad = (clamped < 0) | (clamped >= n_pages)
+    findings: list[Finding] = []
+    if bad.any():
+        rows, cols = np.nonzero(bad)
+        b, w = int(rows[0]), int(cols[0])
+        findings.append(
+            Finding(
+                "KERN-PAGED-BOUNDS",
+                subject,
+                f"index-map clamp maps table entry {int(bt[b, w])} (slot "
+                f"{b}, page {w}) to pool index {int(clamped[b, w])} outside "
+                f"[0, {n_pages}) — out-of-bounds page prefetch "
+                f"({int(bad.sum())} offending entries)",
+            )
+        )
+    return findings
+
+
+def paged_sentinel_findings(
+    *,
+    n_pages: int,
+    page_size: int,
+    window: int | None = None,
+    subject: str,
+    skip_fn=None,
+):
+    """KERN-PAGED-SENTINEL: the paged skip predicate must be decided by the
+    raw table entry, never by the aliased page's contents.
+
+    The index maps clamp the sentinel onto a *real* pool page, so when the
+    kernel body runs, an unmapped entry's ``k_pos`` ref holds some other
+    request's perfectly live positions.  The predicate therefore must (a)
+    skip any ``entry >= n_pages`` even against fully-visible positions —
+    sentinel and corrupt alike — and (b) never skip a mapped page that has
+    visible keys (the KERN-LIVE-SKIP dual: attention mass silently dropped).
+    ``skip_fn`` defaults to the kernel's own ``page_skip`` and is injectable
+    so mutation tests can prove the lint catches a corrupted predicate.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.paged_attention import page_mask, page_skip
+
+    if skip_fn is None:
+        skip_fn = page_skip
+    findings: list[Finding] = []
+    # A page of fully-written, causally-visible positions, queried from just
+    # past its end — the worst case for an aliased sentinel.
+    live_pos = jnp.arange(page_size, dtype=jnp.int32)
+    q_pos = jnp.int32(page_size)
+    assert bool(jnp.any(page_mask(live_pos, q_pos, window=window))), (
+        "lint self-check: probe page must be visible"
+    )
+    for entry in (n_pages, n_pages + 7):  # sentinel, corrupt
+        skip = bool(
+            skip_fn(
+                jnp.int32(entry), live_pos, q_pos,
+                n_pages=n_pages, window=window,
+            )
+        )
+        if not skip:
+            findings.append(
+                Finding(
+                    "KERN-PAGED-SENTINEL",
+                    subject,
+                    f"unmapped table entry {entry} (n_pages={n_pages}) is "
+                    f"not skipped against live aliased positions — the "
+                    f"kernel would attend another request's page",
+                )
+            )
+    skip = bool(
+        skip_fn(
+            jnp.int32(0), live_pos, q_pos, n_pages=n_pages, window=window
+        )
+    )
+    if skip:
+        findings.append(
+            Finding(
+                "KERN-PAGED-SENTINEL",
+                subject,
+                f"mapped page 0 with visible keys (q_pos={int(q_pos)}, "
+                f"window={window}) is skipped — attention mass silently "
+                f"dropped",
+            )
+        )
+    return findings
+
+
+def lint_paged_decode_config(
+    *,
+    group: int,
+    page_size: int,
+    n_pages: int,
+    table_width: int,
+    D: int,
+    data_bytes: int,
+    window: int | None = None,
+    subject: str,
+):
+    """All paged-decode kernel lints at one shape point.
+
+    The bounds probe uses a table shaped like real serving state: pages
+    assigned in descending order (the indirection actually exercised), the
+    tail unmapped at the sentinel, plus one deliberately corrupt entry.
+    """
+    findings = paged_vmem_findings(
+        group=group, page_size=page_size, D=D, data_bytes=data_bytes,
+        subject=subject,
+    )
+    bt = np.full((1, table_width), n_pages, np.int32)
+    used = min(table_width, n_pages)
+    bt[0, :used] = np.arange(n_pages - used, n_pages, dtype=np.int32)[::-1]
+    if table_width > 1:
+        bt[0, table_width - 1] = n_pages + 13  # corrupt entry
+    findings += paged_bounds_findings(bt, n_pages=n_pages, subject=subject)
+    findings += paged_sentinel_findings(
+        n_pages=n_pages, page_size=page_size, window=window, subject=subject
+    )
     return findings
 
 

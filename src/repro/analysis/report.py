@@ -69,6 +69,15 @@ RULES: dict[str, str] = {
         "the tile-skip predicate skips a tile that contains at least one "
         "visible (query, key) pair — silently dropped attention mass"
     ),
+    "KERN-PAGED-BOUNDS": (
+        "the paged-decode kernel's block-table index-map clamp produces a "
+        "pool index outside [0, n_pages) — an out-of-bounds page prefetch"
+    ),
+    "KERN-PAGED-SENTINEL": (
+        "the paged-decode skip predicate mishandles the unmapped sentinel: "
+        "it attends a clamped-alias page, or skips a mapped page with "
+        "visible keys"
+    ),
     # preconditions — shared divisibility/message catalog
     "PRE-EVEN-SPLIT": (
         "a bidirectional split needs an even local sequence length "

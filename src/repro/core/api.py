@@ -62,6 +62,7 @@ __all__ = [
     "PREFILL_CANDIDATES",
     "sp_attention",
     "sp_decode",
+    "sp_decode_paged",
     "sp_prefill",
     "sp_scan",
     "choose_strategy",
@@ -126,6 +127,11 @@ class ExecutionPlan:
     # (``plan(topology=...)``): the scored candidates and the winner, so
     # launchers can record *why* this schedule runs on this fabric.
     topology_decision: dict | None = None
+    # Kernel choice the per-shard callable dispatches to (impl + decode tile
+    # + gather-vs-fused path for paged decode) — recorded so dryrun plan
+    # records and the static gate see *which* kernel serves the step, not
+    # just which schedule.
+    kernel: dict | None = None
 
     def modeled_times(
         self,
@@ -184,6 +190,10 @@ class ParallelContext:
     # keeps more live tiles per grid step, so these can trade smaller.
     block_q_bwd: int | None = None
     block_k_bwd: int | None = None
+    # Decode-path KV tile (None inherits block_k): tunes the dense decode /
+    # gather-oracle flash calls.  The fused paged kernel's KV tile is
+    # intrinsically the page size, so it ignores this.
+    block_k_decode: int | None = None
     inner_strategy: str | None = None  # hybrid inner; defaults to `strategy`
     # Wire format of the traveling (out, lse) accumulator in TokenRing:
     # "bfloat16" halves the per-direction link bytes at ~1e-3 merge rounding
@@ -210,6 +220,12 @@ class ParallelContext:
     @property
     def active(self) -> bool:
         return self.mesh is not None and self.sp_degree > 1
+
+    @property
+    def decode_block_k(self) -> int:
+        return (
+            self.block_k_decode if self.block_k_decode is not None else self.block_k
+        )
 
     def seq_spec(self):
         """PartitionSpec entry for the sequence dimension."""
@@ -641,10 +657,12 @@ class ParallelContext:
         axes = self.sp_axes
         fn = desc.fn
 
+        block_k = self.decode_block_k
+
         def local_fn(q, kc, vc, kp, qp):
             return fn(
                 q, kc, vc, kp, q_pos=qp, axis_names=axes, causal=True,
-                window=window, scale=scale, impl=self.impl, block_k=self.block_k,
+                window=window, scale=scale, impl=self.impl, block_k=block_k,
             )
 
         return ExecutionPlan(
@@ -653,6 +671,65 @@ class ParallelContext:
             out_specs=qspec, local_fn=local_fn, sp_axes=self.sp_axes,
             sp_degree=self.sp_degree,
             cost=self._serving_cost("decode", shapes, table_pages),
+            kernel={
+                "path": "dense", "impl": self.impl, "block_k_decode": block_k,
+            },
+        )
+
+    def plan_decode_paged(
+        self,
+        *,
+        window: int | None = None,
+        scale: float | None = None,
+        shapes: AttnShapes | None = None,
+        table_pages: int | None = None,
+    ) -> ExecutionPlan:
+        """Fused paged-decode plan: Q replicated, the page pool stays
+        page-sharded — **no gathered dense view ever exists**.
+
+        Each shard runs :func:`repro.core.decode.sp_paged_decode_attention`
+        over its contiguous page stripe (block tables remapped locally,
+        kernel indexes pages through its BlockSpec index maps) and the
+        partials merge with the same lse-weighted psum as dense decode —
+        identical wire bytes, so the registered ``"decode"`` cost row prices
+        this plan too.  ``table_pages`` adds the per-step block-table
+        broadcast term exactly as in :meth:`plan_decode`.
+        """
+        from repro.core.decode import sp_paged_decode_attention
+
+        self._validate_axes()
+        dp = self.data_axis
+        seq = self.seq_spec()
+        qspec = P(dp, None, None, None)
+        axes = self.sp_axes
+        impl = self.impl
+        block_k = self.decode_block_k
+
+        def local_fn(q, k_pool, v_pool, pos_pool, bt, qp, lengths):
+            return sp_paged_decode_attention(
+                q, k_pool, v_pool, pos_pool, bt, qp, axis_names=axes,
+                lengths=lengths, window=window, scale=scale, impl=impl,
+                block_k=block_k,
+            )
+
+        return ExecutionPlan(
+            kind="decode", strategy="decode", inner=None, mesh=self.mesh,
+            in_specs=(
+                qspec,                     # q (B, 1, Hq, D)
+                P(seq, None, None, None),  # k pool (n_pages, ps, Hkv, D)
+                P(seq, None, None, None),  # v pool
+                P(seq, None),              # pos pool (n_pages, ps)
+                P(dp, None),               # block tables (B, W)
+                P(dp, None),               # q_pos (B, 1)
+                P(dp),                     # lengths (B,)
+            ),
+            out_specs=qspec, local_fn=local_fn, sp_axes=self.sp_axes,
+            sp_degree=self.sp_degree,
+            cost=self._serving_cost("decode", shapes, table_pages),
+            kernel={
+                "path": "paged_fused", "impl": impl,
+                "block_k_decode": block_k,
+            },
         )
 
     def effective_prefill_shapes(
@@ -1009,6 +1086,51 @@ def sp_decode(
         window=window, scale=scale, shapes=shapes, table_pages=table_pages
     )
     return plan(q, k_cache, v_cache, k_pos, q_pos)
+
+
+def sp_decode_paged(
+    q,
+    k_pool,
+    v_pool,
+    pos_pool,
+    block_tables,
+    q_pos,
+    lengths,
+    *,
+    pctx: ParallelContext,
+    window: int | None = None,
+    scale: float | None = None,
+    table_pages: int | None = None,
+):
+    """Fused paged decode on global arrays: no materialized KV gather.
+
+    ``q (B, 1, Hq, D)`` replicated over the SP axes; per-layer pools
+    ``k_pool``/``v_pool (n_pages, page_size, Hkv, D)`` and ``pos_pool
+    (n_pages, page_size)`` page-sharded; ``block_tables (B, W)`` int32
+    (``n_pages`` sentinel for unmapped entries), ``q_pos (B, 1)`` and
+    ``lengths (B,)`` used lengths (clamps the xla oracle's gathered view —
+    the fused kernel masks by the pos pool's PAD sentinel instead).
+    Dispatches on ``pctx.impl`` inside: pallas / pallas_interpret run the
+    fused kernel of ``kernels/paged_attention.py``, xla the gather oracle.
+    """
+    from repro.core.decode import sp_paged_decode_attention
+
+    if not pctx.active:
+        return sp_paged_decode_attention(
+            q, k_pool, v_pool, pos_pool, block_tables, q_pos, axis_names=(),
+            lengths=lengths, window=window, scale=scale, impl=pctx.impl,
+            block_k=pctx.decode_block_k,
+        )
+
+    shapes = AttnShapes(
+        B=q.shape[0], Sq=q.shape[1], Hq=q.shape[2], Hkv=k_pool.shape[2],
+        D=q.shape[3], Sk=k_pool.shape[0] * k_pool.shape[1],
+        dtype_bytes=jnp.dtype(q.dtype).itemsize,
+    )
+    plan = pctx.plan_decode_paged(
+        window=window, scale=scale, shapes=shapes, table_pages=table_pages
+    )
+    return plan(q, k_pool, v_pool, pos_pool, block_tables, q_pos, lengths)
 
 
 def sp_prefill(

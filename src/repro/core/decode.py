@@ -38,10 +38,11 @@ from jax import lax
 
 from repro.core.merge import finalize, merge_partials
 from repro.core.strategies import CommCost, register_strategy
-from repro.kernels.ops import flash_attention
+from repro.kernels.ops import flash_attention, paged_decode_attention
 
 __all__ = [
     "sp_decode_attention",
+    "sp_paged_decode_attention",
     "sp_prefill_chunk_attention",
     "psum_merge_partials",
     "decode_comm_cost",
@@ -118,6 +119,67 @@ def sp_decode_attention(
         merged, merged_lse = psum_merge_partials(out, lse, axis_names)
     else:
         # Single device (or outside shard_map): the local partial is total.
+        merged, merged_lse = finalize(out, lse)
+    merged = merged.astype(q.dtype)
+    return (merged, merged_lse) if return_lse else merged
+
+
+def sp_paged_decode_attention(
+    q,
+    k_pool,
+    v_pool,
+    pos_pool,
+    block_tables,
+    q_pos,
+    *,
+    axis_names,
+    lengths=None,
+    window: int | None = None,
+    scale: float | None = None,
+    impl: str = "auto",
+    block_k: int | None = None,
+    return_lse: bool = False,
+):
+    """Paged decode attention inside shard_map — fused kernel per shard.
+
+    The page-pool analogue of :func:`sp_decode_attention`: the pool never
+    re-materializes into a dense view.  Each device owns one *contiguous*
+    stripe of ``n_local = n_pages / P`` pool pages (``NamedSharding`` blocks
+    the page dimension contiguously across the SP axes, see
+    ``serving/kv_cache.py::init_paged_cache``), so shard ``idx`` holds global
+    pages ``[idx * n_local, (idx + 1) * n_local)``.  The replicated global
+    block tables are remapped into the local page space — an entry outside
+    the stripe (another shard's page, or the global ``n_pages`` sentinel,
+    which is ``>= lo + n_local`` on every shard) becomes the local sentinel
+    ``n_local`` — and each shard's :func:`paged_decode_attention` partial
+    covers exactly the pages it holds; the partials merge with the same
+    lse-weighted psum as dense decode (identical wire bytes, so the
+    registered ``"decode"`` cost row prices both paths).
+
+    ``q (B, Sq=1, Hq, D)`` and ``q_pos (B, 1)`` replicated over the SP axes;
+    per-layer pools ``k_pool``/``v_pool (n_local, page_size, Hkv, D)`` and
+    ``pos_pool (n_local, page_size)`` page-sharded; ``block_tables (B, W)``
+    global page ids.  Returns the merged ``(B, Sq, Hq, D)`` (plus merged lse
+    when ``return_lse``).
+    """
+    n_local = k_pool.shape[0]
+    bt = block_tables.astype(jnp.int32)
+    if axis_names:
+        idx = jnp.int32(0)
+        for ax in axis_names:
+            idx = idx * lax.psum(1, ax) + lax.axis_index(ax)
+        lo = idx * n_local
+        bt = jnp.where(
+            jnp.logical_and(bt >= lo, bt < lo + n_local), bt - lo, n_local
+        )
+    out, lse = paged_decode_attention(
+        q, k_pool, v_pool, pos_pool, bt, q_pos,
+        lengths=lengths, window=window, scale=scale, block_k=block_k,
+        impl=impl,
+    )
+    if axis_names:
+        merged, merged_lse = psum_merge_partials(out, lse, axis_names)
+    else:
         merged, merged_lse = finalize(out, lse)
     merged = merged.astype(q.dtype)
     return (merged, merged_lse) if return_lse else merged

@@ -117,13 +117,24 @@ tile_mask = _tile_mask
 def kernel_buffer_shapes(kind: str, *, block_q: int, block_k: int, D: int):
     """Per-grid-step VMEM buffer shapes of one kernel, for footprint lints.
 
-    ``kind`` is ``"fwd"``, ``"bwd_dq"`` or ``"bwd_dkv"``.  Returns
-    ``{"in": [...], "out": [...], "scratch": [...]}`` where each entry is
-    ``(shape, elem)`` with ``elem`` one of ``"data"`` (the q/k/v dtype),
+    ``kind`` is ``"fwd"``, ``"bwd_dq"``, ``"bwd_dkv"`` or ``"paged_decode"``.
+    Returns ``{"in": [...], "out": [...], "scratch": [...]}`` where each entry
+    is ``(shape, elem)`` with ``elem`` one of ``"data"`` (the q/k/v dtype),
     ``"f32"`` or ``"i32"``.  These mirror the BlockSpecs and scratch_shapes
-    of the three ``pallas_call``s below — update both together.
+    of the ``pallas_call``s below and in ``paged_attention.py`` — update both
+    together.  For ``"paged_decode"``, ``block_q`` is the GQA query-head
+    group streamed per KV head and ``block_k`` is the page size (one pool
+    page per sequential grid step).
     """
     bq, bk = block_q, block_k
+    if kind == "paged_decode":
+        return {
+            "in": [((1, 1, bq, D), "data"), ((1, bk, 1, D), "data"),
+                   ((1, bk, 1, D), "data"), ((1, bk), "i32")],
+            "out": [((1, 1, bq, D), "data"), ((1, 1, bq), "f32")],
+            "scratch": [((bq, D), "f32"), ((bq, MXU_LANE), "f32"),
+                        ((bq, MXU_LANE), "f32")],
+        }
     pos = [((1, bq), "i32"), ((1, bk), "i32")]
     qkv = [((1, bq, 1, D), "data"), ((1, bk, 1, D), "data"),
            ((1, bk, 1, D), "data")]

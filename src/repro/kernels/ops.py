@@ -38,7 +38,12 @@ from repro.kernels.flash_attention import (
 )
 from repro.kernels.ref import normalize_positions
 
-__all__ = ["flash_attention", "FlashConfig", "backward_tile_counts"]
+__all__ = [
+    "flash_attention",
+    "paged_decode_attention",
+    "FlashConfig",
+    "backward_tile_counts",
+]
 
 NEG_INF = float(jnp.finfo(jnp.float32).min)
 
@@ -55,6 +60,10 @@ class FlashConfig:
     # blocks can be the right VMEM trade on real hardware.
     block_q_bwd: int | None = None
     block_k_bwd: int | None = None
+    # Decode-path KV tile; None inherits block_k.  The fused paged kernel's
+    # intrinsic KV tile is the page size, so this knob tunes the decode-time
+    # dense/gather (xla oracle) flash calls.
+    block_k_decode: int | None = None
     impl: str = "auto"  # auto | pallas | pallas_interpret | xla
 
     def resolve_impl(self) -> str:
@@ -69,6 +78,12 @@ class FlashConfig:
     @property
     def bwd_block_k(self) -> int:
         return self.block_k_bwd if self.block_k_bwd is not None else self.block_k
+
+    @property
+    def decode_block_k(self) -> int:
+        return (
+            self.block_k_decode if self.block_k_decode is not None else self.block_k
+        )
 
 
 def _pick_block(s: int, target: int) -> int:
@@ -437,3 +452,66 @@ def flash_attention(
         impl=impl,
     )
     return _flash(cfg, q, k, v, q_pos, k_pos)
+
+
+def paged_decode_attention(
+    q,
+    k_pool,
+    v_pool,
+    pos_pool,
+    block_tables,
+    q_pos,
+    *,
+    lengths=None,
+    window: int | None = None,
+    scale: float | None = None,
+    block_k: int | None = None,
+    impl: str = "auto",
+):
+    """Paged decode attention over a page-pool KV cache -> ``(out, lse)``.
+
+    Dispatches on ``impl`` exactly like :func:`flash_attention`:
+
+      * ``pallas`` / ``pallas_interpret`` — the fused kernel in
+        ``paged_attention.py``: the block table is scalar-prefetched and the
+        BlockSpec index maps address the page pool directly, so **no gathered
+        dense buffer ever exists**.
+      * ``xla`` — the oracle: materialize the block-table view with
+        ``gather_pages`` (clamped to pages actually mapped when ``lengths``
+        is given) and run the jnp flash over it.
+      * ``auto`` — pallas on TPU, xla elsewhere.
+
+    Shapes: ``q (B, 1, Hq, D)``, pools ``(n_pages, page_size, Hkv, D)``,
+    ``pos_pool (n_pages, page_size) int32``, ``block_tables (B, W) int32``
+    (entries ``>= n_pages`` are the unmapped sentinel), ``q_pos (B, 1)``,
+    ``lengths (B,)`` used lengths (xla view clamp only — the kernel masks by
+    the pos pool's PAD sentinel and needs no lengths).  ``block_k`` tunes the
+    xla oracle's KV tile; the fused kernel's tile is intrinsically the page
+    size.  Decode is forward-only: no vjp, partials merge downstream.
+    """
+    resolved = FlashConfig(impl=impl).resolve_impl()
+    if resolved in ("pallas", "pallas_interpret"):
+        from repro.kernels.paged_attention import paged_decode_fwd_pallas
+
+        return paged_decode_fwd_pallas(
+            q, k_pool, v_pool, pos_pool, block_tables, q_pos,
+            window=window, scale=scale,
+            interpret=resolved == "pallas_interpret",
+        )
+    if resolved != "xla":
+        raise ValueError(f"unknown impl {impl!r}")
+    # function-level import: serving.kv_cache is a consumer of this module's
+    # siblings, keep the layering one-directional at import time.
+    from repro.serving.kv_cache import gather_pages, gather_positions, view_indices
+
+    page_size = k_pool.shape[1]
+    flat_view = view_indices(block_tables, page_size, lengths=lengths)
+    k_view = gather_pages(k_pool, flat_view)
+    v_view = gather_pages(v_pool, flat_view)
+    pos_view = gather_positions(pos_pool, flat_view)
+    return flash_attention(
+        q, k_view, v_view, q_pos=q_pos, k_pos=pos_view,
+        causal=True, window=window, scale=scale,
+        block_q=1, block_k=block_k if block_k is not None else 512,
+        impl="xla",
+    )

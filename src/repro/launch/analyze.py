@@ -98,6 +98,25 @@ def analyze_kernels(report: Report) -> None:
                     subject=subject,
                 ))
                 report.note_checked("kernel")
+    # Paged-decode kernel: GQA-group x page-size grid the serving engine
+    # actually runs, plus sentinel/corrupt-table probes of the index-map
+    # clamp and the raw-entry skip predicate.
+    from repro.analysis.kernel_lint import lint_paged_decode_config
+
+    for group in (1, 4, 8):
+        for page_size in (16, 128):
+            for data_bytes in (4, 2):
+                for D_k in (64, 128):
+                    subject = (
+                        f"PagedDecode(group={group}, page={page_size}, "
+                        f"D={D_k}, {data_bytes}B)"
+                    )
+                    report.extend(lint_paged_decode_config(
+                        group=group, page_size=page_size, n_pages=64,
+                        table_width=8, D=D_k, data_bytes=data_bytes,
+                        window=WINDOW, subject=subject,
+                    ))
+                    report.note_checked("kernel")
     # Tile-skip soundness over the layouts the strategies actually produce.
     S = 256
     for P in (2, 4):

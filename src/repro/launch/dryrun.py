@@ -305,6 +305,10 @@ def run_cell(arch, shape_name, *, multi_pod, strategy, out_dir, force=False,
                 "inner": plan.inner,
                 "predicted_link_bytes_fwd": plan.cost.fwd_bytes,
                 "predicted_link_bytes_bwd": plan.cost.bwd_bytes,
+                # Which decode kernel the plan binds: the dense resident
+                # path here; paged engines record "paged_fused" via
+                # plan_decode_paged (gate checks this against --impl).
+                "kernel": plan.kernel,
             }
         except ValueError as e:
             plan_info = {"error": str(e)}

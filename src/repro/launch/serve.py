@@ -146,6 +146,17 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens to "
                     "every request (exercises the prefix cache)")
+    ap.add_argument("--impl", default="auto",
+                    choices=("auto", "pallas", "pallas_interpret", "xla"),
+                    help="attention kernel impl: pallas runs the fused "
+                    "paged-decode kernel (block-table indexing in the index "
+                    "maps, no gathered KV view); xla keeps the dense-gather "
+                    "oracle; pallas_interpret runs the kernel in interpreter "
+                    "mode on CPU (docs/kernels.md)")
+    ap.add_argument("--block-k-decode", type=int, default=None,
+                    help="KV tile for the *dense* decode flash kernel "
+                    "(the paged kernel tiles by page; this knob also rides "
+                    "into FlashConfig.block_k_decode for plan records)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fault-rate", type=float, default=0.0,
@@ -175,7 +186,9 @@ def main(argv=None):
     cfg = ARCHS[args.arch]
     if args.reduced:
         cfg = cfg.reduced()
-    pctx = ParallelContext(mesh=None, impl="auto")
+    pctx = ParallelContext(
+        mesh=None, impl=args.impl, block_k_decode=args.block_k_decode
+    )
     bundle = build_model(cfg, pctx)
     params = bundle.init(jax.random.PRNGKey(args.seed))
 

@@ -22,7 +22,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import ParallelContext, sp_attention, sp_decode, sp_prefill
+from repro.core.api import (
+    ParallelContext,
+    sp_attention,
+    sp_decode,
+    sp_decode_paged,
+    sp_prefill,
+)
 from repro.models.layers import (
     apply_norm,
     apply_rope,
@@ -200,8 +206,9 @@ def attention_decode_paged(
     positions,
     k_pool,
     v_pool,
-    pos_view,
-    flat_view,
+    pos_pool,
+    block_tables,
+    lengths,
     write_page,
     write_off,
     *,
@@ -213,27 +220,45 @@ def attention_decode_paged(
 ):
     """Paged decode step: ``x (B,1,d)``; pools ``(n_pages,ps,Hkv,D)``.
 
-    ``pos_view (B, W*ps)`` / ``flat_view (B, W*ps)`` are the slot's gathered
-    position view and flat token indices (``serving/kv_cache.py``), shared
-    across layers.  ``write_page``/``write_off (B,)`` locate the new token's
-    physical slot (``n_pages`` sentinel drops skipped rows).  The new K/V
-    scatter into the pool first, then the block-table view is gathered and
-    fed to the *same* ``sp_decode`` as the dense path — identical math,
-    page-indirect storage; ``table_pages`` (block-table width) rides into
-    the plan's cost term.  Returns ``(y, k_pool', v_pool')``.
+    ``pos_pool (n_pages, ps)`` is the position pool *already updated* for
+    this step (shared across layers); ``block_tables (B, W)`` the slots'
+    page maps; ``lengths (B,)`` the post-write used lengths.
+    ``write_page``/``write_off (B,)`` locate the new token's physical slot
+    (``n_pages`` sentinel drops skipped rows).  The new K/V scatter into the
+    pool first, then attention dispatches on the resolved kernel impl:
+
+      * pallas / pallas_interpret — the fused paged-decode kernel
+        (``kernels/paged_attention.py``) reads pages in place through the
+        scalar-prefetched block table; **no gathered dense view exists**.
+      * xla — the oracle: gather the block-table view (clamped by
+        ``lengths`` to the pages actually used) and run the *same*
+        ``sp_decode`` as the dense path.
+
+    ``table_pages`` (block-table width) rides into the plan's cost term
+    either way.  Returns ``(y, k_pool', v_pool')``.
     """
-    from repro.serving.kv_cache import gather_pages
+    from repro.kernels.ops import FlashConfig
+    from repro.serving.kv_cache import gather_pages, gather_positions, view_indices
 
     B, S, _ = x.shape
     q, k, v = _project_qkv(p, x, positions, cfg, rope=rope, pctx=pctx)
     kp = k_pool.at[write_page, write_off].set(k[:, 0].astype(k_pool.dtype), mode="drop")
     vp = v_pool.at[write_page, write_off].set(v[:, 0].astype(v_pool.dtype), mode="drop")
-    k_view = constrain(gather_pages(kp, flat_view), pctx, _view_spec(pctx))
-    v_view = constrain(gather_pages(vp, flat_view), pctx, _view_spec(pctx))
-    out = sp_decode(
-        q, k_view, v_view, pos_view, positions, pctx=pctx, window=window,
-        table_pages=table_pages,
-    )
+    if FlashConfig(impl=pctx.impl).resolve_impl() == "xla":
+        page_size = pos_pool.shape[1]
+        flat_view = view_indices(block_tables, page_size, lengths=lengths)
+        pos_view = gather_positions(pos_pool, flat_view)
+        k_view = constrain(gather_pages(kp, flat_view), pctx, _view_spec(pctx))
+        v_view = constrain(gather_pages(vp, flat_view), pctx, _view_spec(pctx))
+        out = sp_decode(
+            q, k_view, v_view, pos_view, positions, pctx=pctx, window=window,
+            table_pages=table_pages,
+        )
+    else:
+        out = sp_decode_paged(
+            q, kp, vp, pos_pool, block_tables, positions, lengths,
+            pctx=pctx, window=window, table_pages=table_pages,
+        )
     y = dense(p["wo"], out.reshape(B, S, -1), jnp.dtype(cfg.dtype))
     return y, kp, vp
 

@@ -374,7 +374,9 @@ def lm_prefill_chunk_paged(params, token_ids, cache, n_valid, *, cfg, pctx):
     write_page, write_off = write_coords(
         bt, positions, valid, n_pages, page_size
     )
-    flat_view = view_indices(bt, page_size)
+    # Resident view clamped to the pages the *pre-chunk* length actually
+    # uses: stale mappings beyond it gather as fill, never as data.
+    flat_view = view_indices(bt, page_size, lengths=length)
     # Pre-chunk position view: the resident partial must not see the chunk's
     # own slots (they are attended locally, pre-write).
     old_pos_view = gather_positions(cache["pos"], flat_view)
@@ -419,9 +421,12 @@ def lm_decode_step_paged(params, token_ids, cache, active=None, *, cfg, pctx):
 
     Identical contract (``token_ids (B,)`` -> ``logits (B, V)``, ``active``
     rows only); the new token's K/V land at the physical ``(page, offset)``
-    its block table maps for logical slot ``len[b]``.
+    its block table maps for logical slot ``len[b]``.  Attention consumes
+    the pool *through the block table* (``attention_decode_paged`` — the
+    fused Pallas kernel on pallas impls, the lengths-clamped gather oracle
+    on xla); no dense view is built here.
     """
-    from repro.serving.kv_cache import gather_positions, view_indices, write_coords
+    from repro.serving.kv_cache import write_coords
 
     B = token_ids.shape[0]
     n_pages, page_size = cache["pos"].shape
@@ -437,16 +442,14 @@ def lm_decode_step_paged(params, token_ids, cache, active=None, *, cfg, pctx):
     positions = length[:, None].astype(jnp.int32)  # global pos == length
     pos_pool = cache["pos"].at[write_page, write_off].set(
         positions[:, 0], mode="drop"
-    )
-    flat_view = view_indices(bt, page_size)
-    pos_view = gather_positions(pos_pool, flat_view)  # includes the new token
+    )  # includes the new token
     x = params["embed"]["table"][token_ids[:, None]].astype(jnp.dtype(cfg.dtype))
 
     def body(x, xs):
         p_l, kc_l, vc_l = xs
         h = apply_norm(p_l["ln1"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
         y, kc_l, vc_l = attention_decode_paged(
-            p_l["attn"], h, positions, kc_l, vc_l, pos_view, flat_view,
+            p_l["attn"], h, positions, kc_l, vc_l, pos_pool, bt, new_len,
             write_page, write_off, cfg=cfg, pctx=pctx, window=cfg.window,
             table_pages=bt.shape[1],
         )

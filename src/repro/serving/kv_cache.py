@@ -534,15 +534,30 @@ def init_paged_cache(
 # ---------------------------------------------------------------------------
 
 
-def view_indices(block_tables, page_size: int):
+def view_indices(block_tables, page_size: int, lengths=None):
     """Flat token indices of each slot's gathered view.
 
     ``block_tables (B, W)`` -> ``(B, W * page_size)`` indices into the
     flattened ``n_pages * page_size`` token pool.  Unmapped entries (the
     ``n_pages`` sentinel) map past the pool end, where gathers fill.
+
+    ``lengths (B,)`` additionally clamps the view to the pages each slot
+    *actually uses*: page-slot ``j >= ceil(length / page_size)`` is forced
+    out-of-pool, so its gather fills (K/V -> 0, positions -> ``PAD_POS``)
+    even when the table still maps a page there.  That makes the clamp a
+    correctness guard, not just a bandwidth saving: a stale mapping beyond
+    the used length (e.g. a page kept mapped across a length rollback) can
+    never leak another lifetime's K/V into the view.  Shapes stay static —
+    the clamp is a mask, never a width change — so the engine keeps its one
+    compiled step.
     """
     offs = jnp.arange(page_size, dtype=block_tables.dtype)
-    flat = block_tables[:, :, None] * page_size + offs
+    flat = block_tables[:, :, None] * page_size + offs  # (B, W, page_size)
+    if lengths is not None:
+        used_pages = (lengths.astype(jnp.int32) + page_size - 1) // page_size
+        slot = jnp.arange(block_tables.shape[1], dtype=jnp.int32)
+        live = slot[None, :] < used_pages[:, None]  # (B, W)
+        flat = jnp.where(live[:, :, None], flat, PAD_POS)
     return flat.reshape(block_tables.shape[0], -1)
 
 

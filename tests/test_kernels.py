@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core.zigzag import to_zigzag, zigzag_positions
+from repro.kernels.flash_attention import PAD_POS
 from repro.kernels.ops import flash_attention
 from repro.kernels.ref import attention_reference
 
@@ -275,6 +276,172 @@ def test_backward_tile_skip_counts():
         block_q=blk, block_k=blk, causal=True, window=256,
     )
     assert win < zz  # window prunes deeper than causal alone
+
+
+# ---------------------------------------------------------------------------
+# Fused paged-decode kernel (ISSUE 10 tentpole): block-table indexing in the
+# BlockSpec index maps vs the dense-gather path, both against the pure-jnp
+# oracle on a manually materialized view.
+# ---------------------------------------------------------------------------
+
+PAGED_CASES = [
+    # id, page_size, (Hq, Hkv), lengths, window
+    ("ps1_mha", 1, (2, 2), (1, 3), None),
+    ("ps4_gqa", 4, (8, 2), (3, 4, 5), None),  # page-1 / exact / page+1
+    ("ps8_mqa", 8, (4, 1), (8, 23), None),
+    ("ps16_boundary", 16, (4, 4), (15, 16, 17, 64), None),
+    ("ps8_window", 8, (4, 2), (40, 7), 16),
+]
+
+
+def _paged_case_data(case_id, ps, heads, lengths):
+    """Paged pool state shaped like real serving state: per-slot pages
+    assigned in *reversed* order (the indirection actually exercised), the
+    table tail at the unmapped sentinel, and unwritten pool slots carrying
+    random K/V under PAD_POS positions."""
+    import zlib
+
+    Hq, Hkv = heads
+    B, D = len(lengths), 32
+    W = max(-(-L // ps) for L in lengths) + 1  # every slot has a sentinel
+    n_pages = sum(-(-L // ps) for L in lengths) + 2
+    rng = np.random.default_rng(
+        zlib.crc32(repr((case_id, ps, heads, tuple(lengths))).encode())
+    )
+    k_pool = rng.standard_normal((n_pages, ps, Hkv, D)).astype(np.float32)
+    v_pool = rng.standard_normal((n_pages, ps, Hkv, D)).astype(np.float32)
+    pos_pool = np.full((n_pages, ps), PAD_POS, np.int32)
+    bt = np.full((B, W), n_pages, np.int32)
+    free = list(range(n_pages))
+    for b, L in enumerate(lengths):
+        used = -(-L // ps)
+        pages = [free.pop() for _ in range(used)][::-1]
+        for ip, pg in enumerate(pages):
+            bt[b, ip] = pg
+            for off in range(ps):
+                if ip * ps + off < L:
+                    pos_pool[pg, off] = ip * ps + off
+    q = rng.standard_normal((B, 1, Hq, D)).astype(np.float32)
+    q_pos = (np.asarray(lengths, np.int32) - 1)[:, None]
+    return (
+        jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool),
+        jnp.asarray(pos_pool), jnp.asarray(bt), jnp.asarray(q_pos),
+    )
+
+
+def _materialize_view(k_pool, v_pool, pos_pool, bt):
+    """Dense per-row view via plain numpy indexing — the test's own gather,
+    independent of the library's view_indices/gather_pages under test."""
+    n_pages, ps = pos_pool.shape
+    bt = np.asarray(bt)
+    mapped = bt < n_pages
+    safe = np.where(mapped, bt, 0)
+    kv_shape = lambda pool: np.where(
+        mapped[:, :, None, None, None], np.asarray(pool)[safe], 0.0
+    )
+    k = kv_shape(k_pool).reshape(bt.shape[0], -1, *k_pool.shape[2:])
+    v = kv_shape(v_pool).reshape(bt.shape[0], -1, *v_pool.shape[2:])
+    pos = np.where(mapped[:, :, None], np.asarray(pos_pool)[safe], PAD_POS)
+    return jnp.asarray(k), jnp.asarray(v), jnp.asarray(pos.reshape(bt.shape[0], -1))
+
+
+@pytest.mark.parametrize(
+    "impl",
+    [
+        # Interpret mode is the kernel acceptance gate; CI's kernels-interpret
+        # job carries it (slow mark), the xla rows gate the gather fallback
+        # (and its lengths clamp) in tier-1.
+        pytest.param("pallas_interpret", marks=pytest.mark.slow),
+        "xla",
+    ],
+)
+@pytest.mark.parametrize("case", PAGED_CASES, ids=[c[0] for c in PAGED_CASES])
+def test_paged_decode_matches_oracle(impl, case):
+    from repro.kernels.ops import paged_decode_attention
+
+    case_id, ps, heads, lengths, window = case
+    q, k_pool, v_pool, pos_pool, bt, q_pos = _paged_case_data(
+        case_id, ps, heads, lengths
+    )
+    out, lse = paged_decode_attention(
+        q, k_pool, v_pool, pos_pool, bt, q_pos,
+        lengths=jnp.asarray(lengths, jnp.int32), window=window, impl=impl,
+    )
+    k_view, v_view, pos_view = _materialize_view(k_pool, v_pool, pos_pool, bt)
+    ref_out, ref_lse = attention_reference(
+        q, k_view, v_view, q_pos=q_pos, k_pos=pos_view, causal=True,
+        window=window,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref_out), atol=2e-5, rtol=2e-5,
+        err_msg=f"{case_id} out",
+    )
+    np.testing.assert_allclose(
+        np.asarray(lse), np.asarray(ref_lse), atol=1e-4, rtol=1e-4,
+        err_msg=f"{case_id} lse",
+    )
+
+
+@pytest.mark.parametrize("impl", ["pallas_interpret", "xla"])
+def test_paged_decode_dead_row_is_merge_identity(impl):
+    """A slot with no mapped pages must come out as the TokenRing merge
+    identity (out = 0, lse = -inf) — and the sentinel's clamped alias (the
+    index maps prefetch pool page n_pages - 1) must never leak, even when
+    that page holds another row's live, causally-visible data."""
+    from repro.kernels.ops import paged_decode_attention
+
+    q, k_pool, v_pool, pos_pool, bt, q_pos = _paged_case_data(
+        "dead", 4, (4, 2), (9, 5)
+    )
+    n_pages = k_pool.shape[0]
+    bt = bt.at[1, :].set(n_pages)  # row 1: fully unmapped
+    # Make the clamp target page scream if it leaks: huge live-looking K/V
+    # at positions row 1's query would consider visible.
+    k_pool = k_pool.at[n_pages - 1].set(1e3)
+    v_pool = v_pool.at[n_pages - 1].set(1e3)
+    pos_pool = pos_pool.at[n_pages - 1].set(0)
+    out, lse = paged_decode_attention(
+        q, k_pool, v_pool, pos_pool, bt, q_pos,
+        lengths=jnp.asarray([9, 0], jnp.int32), impl=impl,
+    )
+    np.testing.assert_array_equal(np.asarray(out[1]), 0.0)
+    assert np.all(np.isneginf(np.asarray(lse[1])))
+    assert np.all(np.isfinite(np.asarray(out[0]))), "live row unaffected"
+
+
+def test_paged_decode_vmem_shapes_lintable():
+    """kernel_buffer_shapes prices the paged kernel's blocks (group x page),
+    and the analyze-gate lint set is clean at serving shape points."""
+    from repro.analysis.kernel_lint import (
+        lint_paged_decode_config,
+        vmem_estimate,
+    )
+
+    est = vmem_estimate(
+        "paged_decode", block_q=8, block_k=128, D=128, data_bytes=2
+    )
+    assert 0 < est < 16 * 2**20
+    findings = lint_paged_decode_config(
+        group=8, page_size=128, n_pages=64, table_width=8, D=128,
+        data_bytes=2, subject="t",
+    )
+    assert findings == []
+
+
+def test_paged_sentinel_lint_catches_mutant():
+    """The KERN-PAGED-SENTINEL lint must flag a predicate that decides
+    liveness from page contents instead of the raw table entry."""
+    from repro.analysis.kernel_lint import paged_sentinel_findings
+
+    def mutant_skip(entry, k_pos, q_pos, *, n_pages, window=None):
+        # drops the entry term: trusts the (aliased) positions
+        return jnp.min(k_pos) >= PAD_POS // 2
+
+    findings = paged_sentinel_findings(
+        n_pages=8, page_size=4, subject="mutant", skip_fn=mutant_skip
+    )
+    assert {f.rule for f in findings} == {"KERN-PAGED-SENTINEL"}
+    assert len(findings) == 2  # sentinel and corrupt entry both attended
 
 
 def test_pick_block_boundary():

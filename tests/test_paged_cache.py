@@ -186,6 +186,53 @@ def test_paged_matches_dense_across_page_sizes():
             tok = int(np.argmax(np.asarray(ld[0])))
 
 
+def test_view_indices_lengths_clamp_masks_stale_pages():
+    """Regression for the dense-gather over-read: the view must clamp to the
+    pages the row's *length* actually uses.  A stale block-table mapping
+    beyond the used length (a freed page still holding live-looking
+    positions) gathers as fill — K/V = 0, positions = PAD_POS — never as
+    data; the partial last page stays fully visible (its unwritten slots are
+    masked element-wise by the position pool, not by the clamp)."""
+    from repro.serving.kv_cache import (
+        PAD_POS,
+        gather_pages,
+        gather_positions,
+        view_indices,
+    )
+
+    ps, n_pages = 4, 8
+    rng = np.random.default_rng(7)
+    k_pool = jnp.asarray(rng.standard_normal((n_pages, ps, 1, 2)), jnp.float32)
+    pos_pool = np.full((n_pages, ps), PAD_POS, np.int32)
+    # Reversed page order: slot order [7, 6], then stale mappings [5, 3].
+    bt = jnp.asarray(np.array([[7, 6, 5, 3]], np.int32))
+    length = 6  # pages 7 (full) + 6 (2 of 4 slots written)
+    pos_pool[7] = [0, 1, 2, 3]
+    pos_pool[6, :2] = [4, 5]
+    pos_pool[5] = [0, 1, 2, 3]  # stale: looks causally visible
+    pos_pool[3] = [0, 1, 2, 3]
+    pos_pool = jnp.asarray(pos_pool)
+    lengths = jnp.asarray([length], jnp.int32)
+
+    flat = view_indices(bt, ps, lengths=lengths)
+    pos = np.asarray(gather_positions(pos_pool, flat))[0]
+    kv = np.asarray(gather_pages(k_pool, flat))[0]
+    # Used pages, in table order (reversed page ids), fully visible...
+    np.testing.assert_array_equal(pos[:ps], [0, 1, 2, 3])
+    np.testing.assert_array_equal(pos[ps:ps + 2], [4, 5])
+    # ...including the partial page's unwritten tail (element-masked):
+    np.testing.assert_array_equal(pos[ps + 2:2 * ps], [PAD_POS, PAD_POS])
+    np.testing.assert_array_equal(
+        kv[:2 * ps], np.asarray(k_pool)[[7, 6]].reshape(2 * ps, 1, 2)
+    )
+    # Stale mapped pages beyond ceil(6/4)=2 slots: fill, not data.
+    np.testing.assert_array_equal(pos[2 * ps:], PAD_POS)
+    np.testing.assert_array_equal(kv[2 * ps:], 0.0)
+    # Without the clamp the stale positions leak — the bug being pinned.
+    pos_unclamped = np.asarray(gather_positions(pos_pool, view_indices(bt, ps)))
+    assert (pos_unclamped[0, 2 * ps:] < PAD_POS).all()
+
+
 def test_paged_unmapped_pages_are_invisible():
     """Writes through unmapped block-table entries drop; gathers of unmapped
     entries mask out — a row with no pages behaves as an empty cache."""
